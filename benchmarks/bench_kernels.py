@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path (the
+interpret-mode Pallas timing is not hardware-representative — correctness is
+asserted in tests; the TPU-side perf claim is structural: VMEM tiling +
+online softmax remove the [S,S] HBM round-trip)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import aggregation, mining
+from repro.kernels.flash_attention import attention_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def bench_attention():
+    b, h, s, d = 1, 4, 1024, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    us = _time(f, q, k, v)
+    flops = 4 * b * h * s * s * d
+    common.csv_line("kernel_attention_ref_s1024", us,
+                    f"gflops_per_s={flops / us / 1e3:.1f}")
+
+
+def bench_fedavg():
+    c, n = 20, 1_000_000
+    x = jax.random.normal(jax.random.key(0), (c, n))
+    f = jax.jit(lambda x: aggregation.fedavg({"w": x})["w"])
+    us = _time(f, x)
+    gb = c * n * 4 * 2 / 1e9
+    common.csv_line("kernel_fedavg_20x1M", us,
+                    f"gbytes_per_s={gb / (us / 1e6):.1f}")
+
+
+def bench_pow():
+    f = jax.jit(lambda ph: mining.pow_search(ph, jnp.uint32(1),
+                                             jnp.uint32(0), 65536)[0])
+    us = _time(f, jnp.uint32(3))
+    common.csv_line("kernel_pow_64k", us,
+                    f"mhash_per_s={65536 / us:.2f}")
+
+
+def run():
+    bench_attention()
+    bench_fedavg()
+    bench_pow()

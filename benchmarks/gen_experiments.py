@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSONs (experiments/dryrun/*.json). §Perf and §Paper-validation are authored
+by hand in EXPERIMENTS.md; this module prints the generated sections so they
+can be spliced in (and is reused by benchmarks.roofline).
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments > experiments/generated_sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if isinstance(x, str):
+        return x
+    a = abs(x)
+    if a >= 1e4 or (a < 1e-2 and a > 0):
+        return f"{x:.3g}{unit}"
+    return f"{x:.3f}{unit}"
+
+
+def load(mesh):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if p.endswith(".baseline.json"):
+            continue
+        r = json.load(open(p))
+        if r.get("mesh") == mesh:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["xlstm-125m", "qwen3-32b", "nemotron-4-15b", "jamba-1.5-large-398b",
+         "paligemma-3b", "hubert-xlarge", "phi4-mini-3.8b",
+         "kimi-k2-1t-a32b", "minicpm-2b", "deepseek-v2-236b"]
+
+
+def dryrun_section():
+    print("## §Dry-run\n")
+    for mesh, label in [("pod16x16", "single-pod (16x16 = 256 chips)"),
+                        ("pod2x16x16", "multi-pod (2x16x16 = 512 chips)")]:
+        recs = load(mesh)
+        n_ok = sum(r["status"] == "ok" for r in recs.values())
+        n_skip = sum(r["status"] == "skipped" for r in recs.values())
+        n_fail = len(recs) - n_ok - n_skip
+        print(f"### {label}: {n_ok} ok / {n_skip} skipped / {n_fail} failed\n")
+        print("| arch | shape | status | lower s | compile s | HLO flops/dev "
+              "| HBM bytes/dev | coll bytes/dev | bytes/dev (XLA args+temp) |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for a in ARCHS:
+            for s in SHAPES:
+                r = recs.get((a, s))
+                if r is None:
+                    continue
+                if r["status"] != "ok":
+                    why = r.get("reason", r.get("error", ""))[:60]
+                    print(f"| {a} | {s} | {r['status']}: {why} | | | | | | |")
+                    continue
+                p = r["hlo_parsed"]
+                ma = r.get("memory_analysis", {})
+                mem = (ma.get("argument_size_in_bytes", 0)
+                       + ma.get("temp_size_in_bytes", 0))
+                print(f"| {a} | {s} | ok | {r['lower_s']} | {r['compile_s']} "
+                      f"| {fmt(p['flops'])} | {fmt(p['hbm_bytes'])} "
+                      f"| {fmt(p['collective_bytes'])} | {fmt(float(mem))} |")
+        print()
+
+
+def roofline_section():
+    print("## §Roofline (single-pod, 256 chips; v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s ICI)\n")
+    recs = load("pod16x16")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPS | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s))
+            if r is None or r["status"] != "ok":
+                continue
+            rl = r["roofline"]
+            print(f"| {a} | {s} | {fmt(rl['compute_s'])} "
+                  f"| {fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} "
+                  f"| {rl['dominant'].replace('_s','')} "
+                  f"| {fmt(r['model_flops'])} "
+                  f"| {fmt(r['useful_flops_ratio'])} |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_section()
+    roofline_section()

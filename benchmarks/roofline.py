@@ -1,0 +1,75 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch x shape x mesh)
+three-term roofline table; identify dominant bottlenecks and what would move
+them. Reads experiments/dryrun/*.json produced by repro.launch.dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_SUGGESTIONS = {
+    "compute_s": "raise arithmetic intensity: larger microbatch per device "
+                 "or fewer local iterations per aggregate",
+    "memory_s": "cut HBM round-trips: chunkwise-parallel recurrence, fused "
+                "kernels, larger fusion blocks, bf16 states",
+    "collective_s": "overlap or shrink collectives: hierarchical aggregate, "
+                    "quantized all-reduce, fewer aggregation boundaries",
+}
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for r in load_records():
+        if r.get("mesh") != mesh:
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "status": r["status"]}
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            row.update({
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"], "bound_s": rl["bound_s"],
+                "useful_flops_ratio": r.get("useful_flops_ratio"),
+                "model_flops": r.get("model_flops"),
+                "fix": _SUGGESTIONS[rl["dominant"]],
+            })
+        else:
+            row["reason"] = r.get("reason", r.get("error"))
+        rows.append(row)
+    return rows
+
+
+def run(mesh: str = "pod16x16") -> List[Dict]:
+    rows = table(mesh)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        common.csv_line("roofline", 0.0, "no dry-run records; run "
+                        "python -m repro.launch.dryrun --all first")
+        return rows
+    n_comp = sum(r["dominant"] == "compute_s" for r in ok)
+    n_mem = sum(r["dominant"] == "memory_s" for r in ok)
+    n_coll = sum(r["dominant"] == "collective_s" for r in ok)
+    worst = max(ok, key=lambda r: r["bound_s"])
+    common.csv_line(
+        f"roofline_{mesh}", 0.0,
+        f"pairs={len(ok)};compute_bound={n_comp};memory_bound={n_mem};"
+        f"collective_bound={n_coll};worst={worst['arch']}x{worst['shape']}")
+    for r in ok:
+        print(f"  {r['arch']:24s} {r['shape']:12s} "
+              f"C={r['compute_s']:9.3g}s M={r['memory_s']:9.3g}s "
+              f"X={r['collective_s']:9.3g}s -> {r['dominant']}")
+    return rows

@@ -1,0 +1,75 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines and writes the full structured
+results to experiments/bench_results.json.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3,table6
+  PYTHONPATH=src python -m benchmarks.run --fast     # mnist proxy only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import bench_kernels, paper_tables, roofline  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "bench_results.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,table2,...,fig10,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="mnist proxy only (skip fashion)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    datasets = ["mnist"] if args.fast else ["mnist", "fashion"]
+
+    benches = {
+        "fig3": lambda ds: paper_tables.fig3_bound_gap(ds, args.seed),
+        "table2": lambda ds: paper_tables.table2_alpha(ds, args.seed),
+        "table3": lambda ds: paper_tables.table3_beta(ds, args.seed),
+        "table4": lambda ds: paper_tables.table4_clients(ds, args.seed),
+        "table5": lambda ds: paper_tables.table5_eta(ds, args.seed),
+        "table6": lambda ds: paper_tables.table6_lazy(ds, args.seed),
+        "table7": lambda ds: paper_tables.table7_sigma(ds, args.seed),
+        "fig10": lambda ds: paper_tables.fig10_dp(ds, args.seed),
+    }
+
+    results = {}
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        for ds in datasets:
+            try:
+                results[f"{name}_{ds}"] = fn(ds)
+            except Exception as e:  # keep the harness running
+                print(f"{name}_{ds},0,ERROR:{type(e).__name__}:{e}",
+                      flush=True)
+                results[f"{name}_{ds}"] = {"error": str(e)}
+    if only is None or "kernels" in only:
+        bench_kernels.run()
+    if only is None or "roofline" in only:
+        results["roofline_pod16x16"] = roofline.run("pod16x16")
+        results["roofline_pod2x16x16"] = roofline.run("pod2x16x16")
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# total {time.time() - t0:.1f}s -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

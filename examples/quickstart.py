@@ -1,0 +1,56 @@
+"""Quickstart: a complete BLADE-FL run in ~40 lines.
+
+20 clients, non-IID synthetic MNIST proxy, K=5 integrated rounds under a
+t_sum=100 budget — local training, lazy clients, PoW mining, hash-chained
+blocks, decentralized aggregation — then evaluate the final global model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import BladeConfig
+from repro.core import allocation, rounds
+from repro.core.aggregation import aggregate_once
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+def main():
+    blade = BladeConfig(n_clients=20, K=5, t_sum=100.0, alpha=1.0, beta=10.0,
+                        eta=0.05, n_lazy=2, sigma2=0.01)
+    tau = allocation.tau_from_budget(blade.t_sum, blade.K, blade.alpha,
+                                     blade.beta)
+    print(f"budget t_sum={blade.t_sum}: K={blade.K} rounds x "
+          f"(tau={tau} local iters + mining)")
+
+    key = jax.random.key(0)
+    data = FLDataSource(key, blade.n_clients, blade.samples_per_client,
+                        blade.dirichlet_alpha)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(
+        n_clients=blade.n_clients, tau=tau, eta=blade.eta,
+        n_lazy=blade.n_lazy, sigma2=blade.sigma2,
+        mine_attempts=allocation.mining_iterations(blade.beta),
+        difficulty_bits=4)
+
+    state, history, ledger = rounds.run_blade_fl(
+        mlp_loss, spec, params, data.round_batch, jax.random.fold_in(key, 2),
+        blade.K)
+
+    for k, h in enumerate(history):
+        print(f"round {k}: global_loss={h['global_loss']:.4f} "
+              f"miner={int(h['winner'])} hash={int(h['pow_hash']):#010x}")
+    loss, metrics = mlp_loss(aggregate_once(state.params), data.eval_data)
+    print(f"\nchain valid: {ledger.validate_chain()} "
+          f"({len(ledger.blocks)} blocks)")
+    print(f"final eval: loss={float(loss):.4f} "
+          f"accuracy={float(metrics['accuracy']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill + KV-cache greedy decode on a reduced
+assigned architecture (same code path the 512-chip dry-run lowers).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-236b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-236b")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    serve(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2.
+Period of 8 blocks: 7 Mamba + 1 attention (attn at index 3, Jamba-style);
+MoE MLP on every 2nd layer, dense MLP otherwise.
+"""
+import dataclasses
+
+from repro.configs.base import MoEConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24_576,
+    vocab=65_536,
+    head_dim=128,
+    mlp="swiglu",
+    block_pattern=("ssm", "ssm", "ssm", "attn", "ssm", "ssm", "ssm", "ssm"),
+    moe=MoEConfig(n_experts=16, top_k=2, n_shared=0, d_ff=24_576, every=2),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2403.19887",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    name="jamba-1.5-large-398b-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=256,
+    vocab=512,
+    block_pattern=("ssm", "attn"),
+    moe=MoEConfig(n_experts=4, top_k=2, n_shared=0, d_ff=256, every=2),
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+)

@@ -1,0 +1,11 @@
+from repro.core import (  # noqa: F401
+    aggregation,
+    allocation,
+    bounds,
+    chain,
+    detection,
+    dp,
+    lazy,
+    mining,
+    rounds,
+)

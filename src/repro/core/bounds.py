@@ -1,0 +1,126 @@
+"""Paper §4/§5 analysis: the loss upper bound G(K), its lazy-client variant,
+and the optimal number of integrated rounds K*.
+
+Equations (numbers follow the paper):
+  (3)  tau = floor((t_sum/K - beta) / alpha)
+  (4)  G(K) = 1 / g(K),
+       g(K) = gamma*eta*phi - [ (delta*xi*K/L)(lambda^(gamma/K) - 1)
+                                - eta*xi*delta*gamma ] / eps^2
+       lambda = eta*L + 1,  gamma = (t_sum - K*beta)/alpha  (= K*tau)
+  (6)  K* = t_sum / sqrt(2*alpha*beta/(eta*L) + alpha*beta + beta^2)
+  (8)  lazy bound: g_lazy(K) = g(K) - (K*xi/eps^2) * (M/N*theta + sqrt(M)/N*sigma^2)
+
+The proofs set eps^2 = delta*xi/phi (Appendix C); we default to that choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundParams:
+    """Learning-theoretic constants of Theorem 1."""
+    eta: float            # learning rate (eta * L < 1 required)
+    L: float              # smoothness
+    xi: float             # Lipschitz constant of F_i
+    delta: float          # gradient divergence (Definition 1)
+    alpha: float          # training time per local iteration
+    beta: float           # mining time per block
+    t_sum: float          # total computing-time budget
+    w0_dist: float = 1.0  # ||w^0 - w*||_2
+    eps2: Optional[float] = None  # eps^2; None => delta*xi/phi (Appendix C)
+
+    @property
+    def phi(self) -> float:
+        return (1.0 - self.eta * self.L / 2.0) / self.w0_dist
+
+    @property
+    def epsilon2(self) -> float:
+        if self.eps2 is not None:
+            return self.eps2
+        return self.delta * self.xi / self.phi
+
+    @property
+    def lam(self) -> float:
+        return self.eta * self.L + 1.0
+
+
+def gamma(p: BoundParams, K: float) -> float:
+    """Total local iterations K*tau (continuous relaxation of eq. 3)."""
+    return (p.t_sum - K * p.beta) / p.alpha
+
+
+def g_of_k(p: BoundParams, K: float, *, M: int = 0, N: int = 1,
+           theta: float = 0.0, sigma2: float = 0.0) -> float:
+    """Denominator g(K) of the bound; the bound is 1/g when g > 0.
+
+    With M > 0 this is L(K) of Appendix G (lazy clients, eq. 38).
+    """
+    gam = gamma(p, K)
+    if gam <= 0 or K <= 0:
+        return float("-inf")
+    lam_pow = p.lam ** (gam / K)
+    h_term = (p.delta * p.xi * K / p.L) * (lam_pow - 1.0) - p.eta * p.xi * p.delta * gam
+    g = gam * p.eta * p.phi - h_term / p.epsilon2
+    if M > 0:
+        g -= (K * p.xi / p.epsilon2) * (M / N * theta + math.sqrt(M) / N * sigma2)
+    return g
+
+
+def loss_bound(p: BoundParams, K: int, **lazy) -> float:
+    """G(K) (eq. 4) or lazy G~(K) (eq. 8). +inf when the bound is vacuous."""
+    g = g_of_k(p, K, **lazy)
+    if g <= 0:
+        return float("inf")
+    return 1.0 / g
+
+
+def k_star_closed_form(p: BoundParams) -> float:
+    """Theorem 3, eq. (6) — valid when eta*L*gamma/K << 1."""
+    return p.t_sum / math.sqrt(
+        2.0 * p.alpha * p.beta / (p.eta * p.L) + p.alpha * p.beta + p.beta ** 2)
+
+
+def k_star_numeric(p: BoundParams, *, k_max: Optional[int] = None,
+                   M: int = 0, N: int = 1, theta: float = 0.0,
+                   sigma2: float = 0.0) -> int:
+    """Integer argmin of the bound over feasible K (tau >= 1)."""
+    if k_max is None:
+        k_max = int(p.t_sum / (p.alpha + p.beta))  # need tau >= 1
+    k_max = max(k_max, 1)
+    best_k, best_v = 1, float("inf")
+    for k in range(1, k_max + 1):
+        if gamma(p, k) / k < 1.0:   # tau < 1: infeasible
+            continue
+        v = loss_bound(p, k, M=M, N=N, theta=theta, sigma2=sigma2)
+        if v < best_v:
+            best_k, best_v = k, v
+    return best_k
+
+
+def is_convex_in_k(p: BoundParams, *, k_max: Optional[int] = None, **lazy) -> bool:
+    """Empirical convexity check of G(K) on the feasible grid (Theorem 2)."""
+    if k_max is None:
+        k_max = int(p.t_sum / (p.alpha + p.beta))
+    ks = [k for k in range(1, max(k_max, 3) + 1) if gamma(p, k) / k >= 1.0]
+    vs = [loss_bound(p, k, **lazy) for k in ks]
+    vs = [v for v in vs if math.isfinite(v)]
+    if len(vs) < 3:
+        return True
+    d2 = np.diff(vs, 2)
+    return bool(np.all(d2 >= -1e-9 * np.maximum(1.0, np.abs(vs[1:-1]))))
+
+
+def estimate_constants(loss_curve, grad_norms=None) -> dict:
+    """Crude empirical (L, xi, delta) estimates from observed training — used
+    by benchmarks to instantiate the bound against experiments (§7)."""
+    losses = np.asarray(loss_curve, dtype=np.float64)
+    dl = np.abs(np.diff(losses))
+    xi = float(np.max(dl)) if dl.size else 1.0
+    L = 2.0 * xi
+    delta = float(np.std(losses)) if losses.size > 1 else 0.1
+    return {"L": max(L, 1e-3), "xi": max(xi, 1e-3), "delta": max(delta, 1e-3)}

@@ -1,0 +1,108 @@
+"""Lazy-client detection (beyond-paper: the paper's §8 names this as future
+work — "the detection of lazy clients will be addressed in our future work").
+
+Observation: a lazy client's broadcast model is an honest model plus
+N(0, sigma^2) noise (eq. 7), so the pairwise distance between the lazy copy
+and its source is ~ sigma*sqrt(P) — orders of magnitude below the distance
+between two independently-trained non-IID clients (which diverge by the
+gradient-divergence delta of Definition 1 times tau*eta). Flagging pairs
+whose distance is a small fraction of the cohort median catches plagiarism
+without knowing sigma.
+
+Runs on the broadcast models BEFORE aggregation (Step 2 — every client sees
+every model, so every client can run detection and vote; consensus on the
+flags can ride the existing block validation). Distances are computed on a
+deterministic random projection of the flattened models, so the cost is
+O(C^2 * sketch) not O(C^2 * P).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def model_sketches(params, sketch_dim: int = 256, seed: int = 0) -> jnp.ndarray:
+    """[C, sketch_dim] random-projection sketch of each client's model."""
+    leaves = [l.reshape(l.shape[0], -1).astype(jnp.float32)
+              for l in jax.tree.leaves(params)]
+    flat = jnp.concatenate(leaves, axis=1)              # [C, P]
+    key = jax.random.key(seed)
+    proj = jax.random.normal(key, (flat.shape[1], sketch_dim)) \
+        * (flat.shape[1] ** -0.5)
+    return flat @ proj
+
+
+def pairwise_distances(sketches: jnp.ndarray) -> jnp.ndarray:
+    """[C, C] Euclidean distances between client sketches."""
+    sq = jnp.sum(sketches ** 2, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * sketches @ sketches.T
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def detect_lazy(params, *, threshold_frac: float = 0.2,
+                sketch_dim: int = 256, seed: int = 0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (suspect_mask [C] bool, min_dist_frac [C]).
+
+    A client is flagged when its nearest-neighbour distance is below
+    ``threshold_frac`` x median pairwise distance — i.e. its model is a
+    near-copy of someone else's. Both members of a plagiarism pair are
+    flagged; the protocol-level tie-break (who trained first) is the
+    block-timestamp order, outside this function's scope.
+    """
+    sk = model_sketches(params, sketch_dim, seed)
+    d = pairwise_distances(sk)
+    c = d.shape[0]
+    big = jnp.max(d) + 1.0
+    d_offdiag = d + jnp.eye(c) * big
+    nearest = jnp.min(d_offdiag, axis=1)                # [C]
+    triu = d_offdiag[jnp.triu_indices(c, k=1)]
+    median = jnp.median(triu)
+    frac = nearest / jnp.maximum(median, 1e-12)
+    return frac < threshold_frac, frac
+
+
+def detect_lazy_round(params, params_ref, *, threshold_frac: float = 0.2,
+                      norm_factor: float = 3.0, sketch_dim: int = 256,
+                      seed: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two-sided in-round detector. ``params_ref`` is the previous global
+    model (all clients start the round from it, so it's common knowledge).
+
+    Regimes (both real, see tests):
+      * sigma*sqrt(P) << honest divergence  -> the copy is anomalously CLOSE
+        to its source: nearest-neighbour test (detect_lazy);
+      * sigma*sqrt(P) >> honest divergence  -> the isotropic disguise noise
+        makes the lazy update anomalously LARGE: update-norm outlier test
+        (honest updates are eta*tau*grad-sized; the lazy one carries
+        sqrt(sigma^2 * P) extra).
+    Returns (suspect_mask, update_norms).
+    """
+    near_mask, _ = detect_lazy(params, threshold_frac=threshold_frac,
+                               sketch_dim=sketch_dim, seed=seed)
+    delta = jax.tree.map(
+        lambda a, r: a - jnp.broadcast_to(
+            r[None] if r.ndim + 1 == a.ndim else r, a.shape).astype(a.dtype),
+        params, params_ref)
+    sk = model_sketches(delta, sketch_dim, seed)
+    norms = jnp.sqrt(jnp.sum(sk.astype(jnp.float32) ** 2, axis=1))
+    median = jnp.median(norms)
+    outlier_mask = norms > norm_factor * jnp.maximum(median, 1e-12)
+    return near_mask | outlier_mask, norms
+
+
+def detection_metrics(suspect_mask: jnp.ndarray, n_lazy: int) -> dict:
+    """Precision/recall against the ground-truth lazy set (first M clients;
+    note the plagiarism SOURCE is also near its copy, so flagged honest
+    sources count against precision — reported, not hidden)."""
+    c = suspect_mask.shape[0]
+    truth = jnp.arange(c) < n_lazy
+    tp = jnp.sum(suspect_mask & truth)
+    fp = jnp.sum(suspect_mask & ~truth)
+    fn = jnp.sum(~suspect_mask & truth)
+    return {
+        "precision": float(tp / jnp.maximum(tp + fp, 1)),
+        "recall": float(tp / jnp.maximum(tp + fn, 1)),
+        "flagged": int(jnp.sum(suspect_mask)),
+    }

@@ -1,0 +1,36 @@
+"""Differential privacy on broadcast models (paper §6, Definition 2).
+
+Clients add Gaussian noise to the model they broadcast. The paper's point
+(validated in benchmarks/bench_dp.py, Figs 10-11): DP moves the achievable
+loss but NOT the optimal K — privacy and resource allocation decouple.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_sigma(epsilon: float, delta: float, sensitivity: float = 1.0) -> float:
+    """Classic Gaussian-mechanism calibration: sigma >= sqrt(2 ln(1.25/delta)) * S / eps."""
+    if epsilon <= 0:
+        raise ValueError("epsilon must be positive")
+    return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / epsilon
+
+
+def epsilon_of_sigma(sigma: float, delta: float, sensitivity: float = 1.0) -> float:
+    return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / max(sigma, 1e-12)
+
+
+def privatize(params, key, sigma: float):
+    """Add N(0, sigma^2) to every leaf (per-client, pre-broadcast)."""
+    if sigma <= 0.0:
+        return params
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        (leaf + (jax.random.normal(k, leaf.shape, jnp.float32) * sigma).astype(leaf.dtype))
+        for leaf, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, out)

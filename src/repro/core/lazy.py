@@ -1,0 +1,57 @@
+"""Lazy-client model (paper §5.1, eq. 7).
+
+A lazy client skips local training, plagiarizes an honest client's freshly
+trained model and adds N(0, sigma^2) noise to disguise itself. The lazy set
+is static per experiment (first M of N clients); lazy client i copies honest
+client M + (i mod (N - M)). On the mesh this gather over the client-sharded
+leading axis lowers to a collective-permute-like exchange over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def plagiarism_sources(n_clients: int, n_lazy: int) -> np.ndarray:
+    """source[i] = client whose weights client i ends up holding."""
+    assert 0 <= n_lazy < n_clients or (n_lazy == n_clients == 0), \
+        "need at least one honest client when anyone is lazy"
+    src = np.arange(n_clients)
+    n_honest = n_clients - n_lazy
+    for i in range(n_lazy):
+        src[i] = n_lazy + (i % n_honest)
+    return src
+
+
+def apply_lazy(params, key, n_clients: int, n_lazy: int, sigma2: float):
+    """params: pytree with leading client axis C. Returns lazy-transformed
+    params; honest clients untouched."""
+    if n_lazy == 0:
+        return params
+    src = jnp.asarray(plagiarism_sources(n_clients, n_lazy))
+    is_lazy = jnp.arange(n_clients) < n_lazy
+    std = float(np.sqrt(sigma2))
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(leaf, k):
+        stolen = jnp.take(leaf, src, axis=0)
+        if std > 0.0:
+            noise = (jax.random.normal(k, leaf.shape, jnp.float32) * std).astype(leaf.dtype)
+            stolen = stolen + noise
+        sel = is_lazy.reshape((n_clients,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(sel, stolen, leaf)
+
+    return jax.tree.unflatten(treedef, [one(l, k) for l, k in zip(leaves, keys)])
+
+
+def measure_theta(honest_params, lazy_params) -> jnp.ndarray:
+    """theta = ||w_lazy - w_honest||_2 (Theorem 4's degradation term),
+    computed between a lazy client's weights and its plagiarism source."""
+    diffs = jax.tree.map(lambda a, b: jnp.sum((a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)) ** 2),
+                         honest_params, lazy_params)
+    return jnp.sqrt(sum(jax.tree.leaves(diffs)))

@@ -1,0 +1,101 @@
+"""Proof-of-Work simulation (paper §2.2, §3.1 Step 3).
+
+The real Bitcoin-style PoW (SHA-256 preimage search) is replaced by an
+integer mixing hash (xorshift-mult avalanche) searched over a calibrated
+number of nonce attempts — the computing-budget accounting (eq. 1) is what
+matters to the paper, not cryptographic strength. The same mix is implemented
+three ways:
+
+  * ``mix_hash``            — vectorized jnp (reference / CPU sim)
+  * kernels/pow_hash        — Pallas TPU kernel (nonce grid in VMEM tiles)
+  * ``mine_block_py``       — python/hashlib (ledger-level, core/chain.py)
+
+Each client searches its own nonce space; the winner is the argmin hash
+across the client axis (a psum/argmin collective on the mesh — the
+decentralized analogue of "first to find").
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalars, NOT jnp arrays: creating a jnp array at import time would
+# initialize the backend and lock the device count before the dry-run can
+# request its 512 placeholder devices.
+_M1 = np.uint32(2654435761)   # Knuth multiplicative
+_M2 = np.uint32(2246822519)
+_M3 = np.uint32(3266489917)
+
+
+def _avalanche(h):
+    h = h ^ (h >> np.uint32(15))
+    h = h * _M2
+    h = h ^ (h >> np.uint32(13))
+    h = h * _M3
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def mix_hash(prev_hash: jnp.ndarray, payload: jnp.ndarray,
+             nonce: jnp.ndarray) -> jnp.ndarray:
+    """uint32 hash of (prev_hash, payload, nonce); broadcasts over nonce."""
+    h = prev_hash.astype(jnp.uint32) * _M1
+    h = _avalanche(h ^ payload.astype(jnp.uint32))
+    h = _avalanche(h ^ nonce.astype(jnp.uint32))
+    return h
+
+
+def digest_tree(tree) -> jnp.ndarray:
+    """Cheap uint32 digest of a pytree of arrays (model fingerprint for the
+    block header). Deterministic, differentiation-free."""
+    leaves = jax.tree.leaves(tree)
+    acc = jnp.uint32(0x9E3779B9)
+    for leaf in leaves:
+        x = leaf
+        s = jnp.asarray(
+            jnp.sum(x.astype(jnp.float32)) if jnp.issubdtype(x.dtype, jnp.floating)
+            else jnp.sum(x.astype(jnp.int32)).astype(jnp.float32))
+        bits = jax.lax.bitcast_convert_type(s, jnp.uint32)
+        acc = _avalanche(acc ^ bits)
+    return acc
+
+
+def pow_search(prev_hash: jnp.ndarray, payload: jnp.ndarray, client_id: jnp.ndarray,
+               n_attempts: int, nonce_offset: jnp.ndarray | int = 0,
+               chunk: int = 1024) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Search ``n_attempts`` nonces; return (best_hash, best_nonce).
+
+    Each client salts its nonce space with its id (disjoint search — the
+    blockchain race). Runs in fixed-size chunks via fori_loop so the HLO and
+    memory stay O(chunk) regardless of the calibrated mining budget.
+    """
+    n_attempts = int(n_attempts)
+    chunk = min(chunk, n_attempts)
+    n_chunks = -(-n_attempts // chunk)
+    salt = _avalanche(client_id.astype(jnp.uint32) * _M2)
+    base = jnp.asarray(nonce_offset, jnp.uint32)
+
+    def body(i, best):
+        best_h, best_n = best
+        nonces = base + jnp.uint32(i) * jnp.uint32(chunk) + jnp.arange(chunk, dtype=jnp.uint32)
+        hs = mix_hash(prev_hash, payload ^ salt, nonces)
+        idx = jnp.argmin(hs)
+        h, n = hs[idx], nonces[idx]
+        take = h < best_h
+        return (jnp.where(take, h, best_h), jnp.where(take, n, best_n))
+
+    init = (jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+def difficulty_threshold(difficulty_bits: int) -> jnp.ndarray:
+    """Hash must be below this to 'solve' the block."""
+    return jnp.uint32(0xFFFFFFFF >> difficulty_bits)
+
+
+def winner_of(best_hashes: jnp.ndarray) -> jnp.ndarray:
+    """argmin over the client axis = first solver in the race."""
+    return jnp.argmin(best_hashes)

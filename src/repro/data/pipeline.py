@@ -1,0 +1,74 @@
+"""Sharding-aware batching for training drivers.
+
+The FL substrate consumes client-stacked batches [C, m, ...]; the pipeline
+builds them deterministically per round (so experiments are reproducible and
+the dry-run's ShapeDtypeStructs match real batches bit-for-shape).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import synthetic
+
+
+class FLDataSource:
+    """Fixed per-client local datasets (paper: |D_i| = 512 samples each);
+    each round every client does full-batch GD on its local shard."""
+
+    def __init__(self, key, n_clients: int, samples_per_client: int,
+                 dirichlet_alpha: float = 0.5, dataset: str = "mnist",
+                 seed: int = 0):
+        n_eval = 2048
+        n_total = n_clients * samples_per_client * 2 + n_eval
+        maker = synthetic.mnist_proxy if dataset == "mnist" else synthetic.fashion_proxy
+        # one draw so train and eval share the SAME class templates
+        full = maker(key, n_total)
+        self.eval_data = {k: v[-n_eval:] for k, v in full.items()}
+        self.data = {k: v[:-n_eval] for k, v in full.items()}
+        part = synthetic.dirichlet_partition(
+            np.asarray(self.data["y"]), n_clients, dirichlet_alpha,
+            samples_per_client, seed=seed)
+        self.client_data = synthetic.client_batches(self.data, part)
+
+    def round_batch(self, k: int) -> Dict[str, jnp.ndarray]:
+        # full local batch every round (paper does full-batch GD locally)
+        return self.client_data
+
+
+class LMDataSource:
+    """Synthetic token streams for the assigned-architecture train runs,
+    stacked on a leading client axis."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, n_clients: int,
+                 seed: int = 0):
+        self.cfg, self.shape, self.n_clients = cfg, shape, n_clients
+        self.seed = seed
+
+    def round_batch(self, k: int) -> Dict[str, jnp.ndarray]:
+        cfg, shape = self.cfg, self.shape
+        key = jax.random.key(self.seed * 100_003 + k)
+        b, s = shape.global_batch, shape.seq_len
+        c = self.n_clients
+        m = b // c
+        if cfg.family == "vlm":
+            p = cfg.vlm_prefix_len
+            k1, k2 = jax.random.split(key)
+            return {
+                "patches": jax.random.normal(k1, (c, m, p, cfg.d_model), jnp.float32),
+                "tokens": synthetic.lm_token_stream(k2, c * m, s - p, cfg.vocab
+                                                    ).reshape(c, m, s - p),
+            }
+        if cfg.audio_frontend:
+            k1, k2, k3 = jax.random.split(key, 3)
+            return {
+                "frames": jax.random.normal(k1, (c, m, s, cfg.d_model), jnp.float32),
+                "mask_positions": jax.random.bernoulli(k2, 0.08, (c, m, s)),
+                "targets": jax.random.randint(k3, (c, m, s), 0, cfg.vocab),
+            }
+        toks = synthetic.lm_token_stream(key, c * m, s, cfg.vocab)
+        return {"tokens": toks.reshape(c, m, s)}

@@ -1,0 +1,1 @@
+from repro.kernels import fedavg, flash_attention, pow_hash, ssm_scan  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.kernels.fedavg.kernel import fedavg_flat  # noqa: F401
+from repro.kernels.fedavg.ops import fedavg_tree  # noqa: F401
+from repro.kernels.fedavg.ref import fedavg_flat_ref  # noqa: F401

@@ -1,0 +1,62 @@
+"""Fused BLADE-FL aggregation kernel — TPU Pallas.
+
+One VMEM pass per tile fuses the paper's Steps 2+5 epilogue: weighted mean
+over the client axis, re-broadcast to every client slot, and the optional
+additive noise (DP mechanism §6 / lazy disguise §5 — noise tile precomputed
+outside, the kernel fuses the add so the aggregate never round-trips HBM
+between mean, broadcast and noise).
+
+Layout: params are flattened per-leaf to [C, N]; grid tiles N. C (<=32) rides
+whole in the sublane dimension of each tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fedavg_kernel(x_ref, w_ref, noise_ref, o_ref, *, with_noise: bool):
+    x = x_ref[...].astype(jnp.float32)            # [C, bn]
+    w = w_ref[...].astype(jnp.float32)            # [C]
+    agg = jnp.einsum("c,cn->n", w, x)             # weighted mean (w sums to 1)
+    out = jnp.broadcast_to(agg[None, :], x.shape)
+    if with_noise:
+        out = out + noise_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def fedavg_flat(x: jnp.ndarray, weights: jnp.ndarray,
+                noise: jnp.ndarray | None = None, *, block_n: int = 2048,
+                interpret: bool = True) -> jnp.ndarray:
+    """x: [C, N]; weights: [C] (normalized); noise: [C, N] or None."""
+    c, n = x.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        if noise is not None:
+            noise = jnp.pad(noise, ((0, 0), (0, pad)))
+    npad = x.shape[1]
+    with_noise = noise is not None
+    if noise is None:
+        noise = jnp.zeros((c, block_n), x.dtype)  # dummy single tile
+        noise_spec = pl.BlockSpec((c, block_n), lambda i: (0, 0))
+    else:
+        noise_spec = pl.BlockSpec((c, block_n), lambda i: (0, i))
+
+    out = pl.pallas_call(
+        functools.partial(_fedavg_kernel, with_noise=with_noise),
+        grid=(npad // block_n,),
+        in_specs=[
+            pl.BlockSpec((c, block_n), lambda i: (0, i)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            noise_spec,
+        ],
+        out_specs=pl.BlockSpec((c, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c, npad), x.dtype),
+        interpret=interpret,
+    )(x, weights, noise)
+    return out[:, :n]

@@ -1,0 +1,42 @@
+"""Jitted pytree-level wrapper: flatten every leaf to [C, N], run the fused
+kernel, restore structure. Drop-in for core.aggregation.fedavg(+noise)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.kernel import fedavg_flat
+from repro.kernels.fedavg.ref import fedavg_flat_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def fedavg_tree(params, weights=None, noise_tree=None, *, use_kernel: bool = True):
+    """params: pytree with leading client axis C. Returns aggregated pytree
+    (every client slot = weighted mean [+ noise])."""
+    leaves, treedef = jax.tree.flatten(params)
+    c = leaves[0].shape[0]
+    if weights is None:
+        weights = jnp.full((c,), 1.0 / c, jnp.float32)
+    else:
+        weights = weights / jnp.sum(weights)
+    noise_leaves = (jax.tree.flatten(noise_tree)[0] if noise_tree is not None
+                    else [None] * len(leaves))
+    fn = fedavg_flat if use_kernel else (
+        lambda x, w, n, **kw: fedavg_flat_ref(x, w, n))
+    out = []
+    for leaf, nz in zip(leaves, noise_leaves):
+        flat = leaf.reshape(c, -1)
+        nzf = nz.reshape(c, -1) if nz is not None else None
+        if use_kernel:
+            agg = fedavg_flat(flat, weights, nzf,
+                              interpret=_default_interpret())
+        else:
+            agg = fedavg_flat_ref(flat, weights, nzf)
+        out.append(agg.reshape(leaf.shape))
+    return jax.tree.unflatten(treedef, out)

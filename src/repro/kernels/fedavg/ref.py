@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused fedavg kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_flat_ref(x, weights, noise=None):
+    """x: [C, N]; weights: [C] normalized; noise: [C, N] or None."""
+    agg = jnp.einsum("c,cn->n", weights.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    out = jnp.broadcast_to(agg[None, :], x.shape)
+    if noise is not None:
+        out = out + noise.astype(jnp.float32)
+    return out.astype(x.dtype)

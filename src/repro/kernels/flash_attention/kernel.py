@@ -1,0 +1,126 @@
+"""Blocked (flash) attention forward kernel — TPU Pallas.
+
+The prefill hot-spot: O(S^2) attention computed in VMEM tiles with the
+online-softmax recurrence, never materializing the [S, S] score matrix in
+HBM. GQA is handled by expanding kv to the q-head count outside the kernel;
+causal and sliding-window masks are applied per tile with index arithmetic,
+and fully-masked kv tiles short-circuit.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost, so the output block
+and the (m, l, acc) running stats (extra outputs whose index_map ignores the
+kv index) stay resident in VMEM across the kv sweep (TPU grid revisiting).
+
+Block shapes default to 128x128 tiles over (S_q, S_k) with the full head_dim
+in-tile — MXU-aligned for head_dim 64/128/256 (112 for kimi-k2 is padded to
+the lane width by Mosaic transparently).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int, block_q: int,
+                 block_k: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def body():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = q @ k.T                                       # [bq, bk]
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < seq_len
+        if causal:
+            mask = mask & (cols <= rows)
+        if window > 0:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]                                 # [bq]
+        l_prev = l_ref[0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[0] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[0] = m_cur
+        acc_ref[0] = acc_ref[0] * alpha[:, None] + p @ v
+
+    if causal:
+        # kv tiles fully above the diagonal contribute nothing — skip
+        @pl.when(k_start <= q_start + block_q - 1)
+        def _run():
+            body()
+    else:
+        body()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = (acc_ref[0] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q, k, v: [B, H, S, D] (kv already expanded to H heads) -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    assert k.shape == v.shape == (b, h, s, d), (q.shape, k.shape, v.shape)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, "pad seq to block multiple"
+    nq = s // block_q
+    nk = s // block_k
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kern = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_len=s)
+
+    out, _, _, _ = pl.pallas_call(
+        kern,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),      # o
+            jax.ShapeDtypeStruct((b * h, s), jnp.float32),     # running max
+            jax.ShapeDtypeStruct((b * h, s), jnp.float32),     # running denom
+            jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,41 @@
+"""Jitted public wrapper: GQA expansion + dtype policy + kernel/ref dispatch.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU set
+interpret=False (the default flips automatically by backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "use_kernel"))
+def mha(q, k, v, *, causal: bool = True, window: int = 0,
+        block_q: int = 128, block_k: int = 128, use_kernel: bool = True):
+    """q: [B, S, H, D]; k, v: [B, S, Hkv, D] (GQA) -> [B, S, H, D]."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_default_interpret())
+    else:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.pow_hash.kernel import pow_search_kernel  # noqa: F401
+from repro.kernels.pow_hash.ops import mine  # noqa: F401
+from repro.kernels.pow_hash.ref import pow_search_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Jitted wrapper + per-client vmapped mining entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mining
+from repro.kernels.pow_hash.kernel import pow_search_kernel
+from repro.kernels.pow_hash.ref import pow_search_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_attempts", "use_kernel"))
+def mine(prev_hash, payload, client_id, n_attempts: int = 4096, *,
+         nonce_offset=0, use_kernel: bool = True):
+    """Single-client nonce race; salts the payload per client like
+    core.mining.pow_search. Returns (best_hash, best_nonce)."""
+    salt = mining._avalanche(jnp.asarray(client_id, jnp.uint32)
+                             * jnp.uint32(2246822519))
+    payload_s = jnp.asarray(payload, jnp.uint32) ^ salt
+    if use_kernel:
+        return pow_search_kernel(prev_hash, payload_s,
+                                 jnp.asarray(nonce_offset, jnp.uint32),
+                                 n_attempts, interpret=_default_interpret())
+    return pow_search_ref(prev_hash, payload_s, nonce_offset, n_attempts)

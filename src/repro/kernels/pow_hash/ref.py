@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: delegates to core.mining (the canonical implementation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.mining import mix_hash, pow_search  # noqa: F401
+
+
+def pow_search_ref(prev_hash, payload_salted, nonce_offset, n_attempts: int):
+    """Same contract as kernel.pow_search_kernel (payload pre-salted):
+    brute-force over the whole nonce range in one shot."""
+    nonces = jnp.asarray(nonce_offset, jnp.uint32) + jnp.arange(
+        n_attempts, dtype=jnp.uint32)
+    hs = mix_hash(jnp.asarray(prev_hash, jnp.uint32),
+                  jnp.asarray(payload_salted, jnp.uint32), nonces)
+    idx = jnp.argmin(hs)
+    return hs[idx], nonces[idx]

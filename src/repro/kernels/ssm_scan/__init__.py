@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.kernel import ssm_scan  # noqa: F401
+from repro.kernels.ssm_scan.ops import selective_scan  # noqa: F401
+from repro.kernels.ssm_scan.ref import ssm_scan_ref  # noqa: F401

@@ -1,0 +1,23 @@
+"""Jitted wrapper with backend dispatch (kernel on TPU / interpret on CPU,
+jnp reference as the fallback path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "tile_d", "use_kernel"))
+def selective_scan(u, dt, bmat, cmat, a, d_skip, *, tile_t: int = 128,
+                   tile_d: int = 512, use_kernel: bool = True):
+    if use_kernel:
+        return ssm_scan(u, dt, bmat, cmat, a, d_skip, tile_t=tile_t,
+                        tile_d=tile_d, interpret=_default_interpret())
+    return ssm_scan_ref(u, dt, bmat, cmat, a, d_skip)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: the same recurrence via lax.scan over time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, bmat, cmat, a, d_skip):
+    """Same contract as kernel.ssm_scan."""
+    bsz, t, d_in = u.shape
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t) + u_t * d_skip
+        return h, y
+
+    h0 = jnp.zeros((bsz, d_in, a.shape[1]), jnp.float32)
+    xs = (u.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          bmat.swapaxes(0, 1).astype(jnp.float32),
+          cmat.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype), h

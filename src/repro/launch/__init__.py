@@ -1,0 +1,4 @@
+# Intentionally import-light: repro.launch.dryrun must be able to set
+# XLA_FLAGS (512 placeholder devices) BEFORE anything touches jax's backend,
+# so this package does not import submodules eagerly. Import what you need:
+#   from repro.launch import mesh, steps, analysis, hlo_analysis

@@ -1,0 +1,90 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch x shape x mesh), TPU v5e constants from launch.mesh:
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+
+cost_analysis() runs on the post-SPMD (per-device) module: flops/bytes it
+reports are per-device, so the per-chip division is already done — we
+multiply back to record totals AND keep the per-device second. Collective
+bytes are parsed from the compiled HLO text (operand sizes of all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch import mesh as mesh_lib
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_RE = re.compile(
+    r"=\s+(?:\([^=]*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device operand bytes by collective type, from compiled HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        name = m.group(1)
+        args = line[m.end() - 1:]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(args):
+            total += _shape_bytes(dt, dims)
+        out[name] += total
+        counts[name] += 1
+    out.update({f"n_{k}": float(v) for k, v in counts.items()})
+    return out
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             coll_bytes_per_dev: float, chips: int) -> Dict[str, float]:
+    compute_s = flops_per_dev / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / mesh_lib.HBM_BW
+    collective_s = coll_bytes_per_dev / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)  # type: ignore[arg-type]
+    bound = max(compute_s, memory_s, collective_s)
+    return {
+        **terms,
+        "dominant": dom,
+        "bound_s": bound,
+        "chips": chips,
+        "total_flops": flops_per_dev * chips,
+        "total_bytes": bytes_per_dev * chips,
+    }
+
+
+def model_flops(n_active_params: int, tokens: float, backward: bool,
+                local_iters: int = 1) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D inference."""
+    per_tok = 6.0 if backward else 2.0
+    return per_tok * n_active_params * tokens * local_iters

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers AND compiles on the production meshes, and extract the
+roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40-pair sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline via benchmarks.roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, arch_ids, get_arch, get_shape
+from repro.launch import analysis, hlo_analysis, mesh as mesh_lib, steps
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in ca.items():
+        if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed")):
+            keep[k] = float(v)
+    return keep
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             tokens_override=None) -> dict:
+    cfg0 = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "ok"}
+    reason = steps.skip_reason(cfg0, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    cfg = steps.resolve_cfg(cfg0, shape)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        step, abs_in, plan = steps.build_step(shape.kind, cfg0, shape, mesh,
+                                              multi_pod)
+        lowered = step.lower(*abs_in) if isinstance(abs_in, tuple) \
+            else step.lower(abs_in)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec["plan"] = {
+        "n_clients": plan.n_clients, "client_axes": list(plan.client_axes),
+        "batch_axes": list(plan.batch_axes), "fsdp_axes": list(plan.fsdp_axes),
+        "seq_axes": list(plan.seq_axes),
+    }
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["memory_analysis"] = _memory_analysis_dict(compiled)
+    # raw XLA numbers (loop bodies counted ONCE — reference only, see
+    # hlo_analysis docstring); the roofline uses the loop-corrected parse.
+    rec["cost_analysis_raw"] = _cost_analysis_dict(compiled)
+
+    hlo = compiled.as_text()
+    parsed = hlo_analysis.analyze_dict(hlo)
+    rec["hlo_parsed"] = parsed
+    rec["hlo_bytes_len"] = len(hlo)
+
+    flops_dev = parsed["flops"]
+    bytes_dev = parsed["hbm_bytes"]
+    coll_dev = parsed["collective_bytes"]
+    rec["roofline"] = analysis.roofline(flops_dev, bytes_dev, coll_dev, chips)
+
+    # MODEL_FLOPS (useful-compute reference)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tau = 2  # round_spec_for default
+        tokens = shape.global_batch * (shape.seq_len - 1)
+        mf = analysis.model_flops(n_active, tokens, True, tau)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = analysis.model_flops(n_active, tokens, False)
+    else:
+        mf = analysis.model_flops(n_active, shape.global_batch, False)
+    rec["model_flops"] = mf
+    total_hlo_flops = flops_dev * chips
+    rec["useful_flops_ratio"] = (mf / total_hlo_flops) if total_hlo_flops else None
+    rec["active_params"] = n_active
+    rec["total_params"] = cfg.param_count()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    pairs = []
+    archs = arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in pairs:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        out_path = os.path.join(args.out_dir, f"{a}__{s}__{mesh_name}.json")
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached ] {a} x {s} x {mesh_name}: {prev['status']}")
+                n_ok += prev["status"] == "ok"
+                n_skip += prev["status"] == "skipped"
+                continue
+        print(f"[running] {a} x {s} x {mesh_name} ...", flush=True)
+        try:
+            rec = run_pair(a, s, mp)
+        except Exception as e:
+            rec = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        if rec["status"] == "ok":
+            n_ok += 1
+            r = rec["roofline"]
+            print(f"  ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                  f"dominant={r['dominant']} bound={r['bound_s']:.4g}s "
+                  f"useful={rec['useful_flops_ratio']}")
+        elif rec["status"] == "skipped":
+            n_skip += 1
+            print(f"  skipped: {rec['reason']}")
+        else:
+            n_fail += 1
+            print(f"  FAILED: {rec['error']}")
+    print(f"\nsummary: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

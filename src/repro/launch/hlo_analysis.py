@@ -1,0 +1,346 @@
+"""Loop-aware HLO analyzer for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+scan(length=1) and scan(length=10) report identical flops), which silently
+zeroes out the cost of scanned layers, local-iteration loops and microbatch
+accumulation — i.e. almost all of our compute. This module parses the
+compiled per-device HLO text instead and propagates costs through the
+computation tree with loop trip-count multipliers:
+
+  * trip counts: ``backend_config={"known_trip_count":{"n":"N"}}`` on the
+    while op (present for lax.scan/fori_loop), falling back to the largest
+    integer constant in the loop condition computation, else 1;
+  * flops: 2*M*N*K for every ``dot`` (+ conv as implicit dot), wherever it
+    sits (fusion bodies included), times the product of enclosing trips;
+  * HBM bytes: operand+output bytes of top-level (fusion-boundary) ops —
+    fusion-internal ops don't round-trip HBM;
+  * collective bytes: operand bytes of all-reduce/all-gather/reduce-scatter/
+    all-to-all/collective-permute, per enclosing-trip multiplier.
+
+All quantities are per-device (the HLO is the post-SPMD partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|"
+                       r"s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\]{},]+))\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\"\\:{\s]+n[\"\\:\s]+\"?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_tokens_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    """elements of the FIRST shape token."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _dims_of(text: str) -> List[List[int]]:
+    out = []
+    for _, dims in _SHAPE_RE.findall(text):
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_shape_txt: str
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _parse_operands(argtxt: str) -> List[str]:
+    # argtxt: inside the outer parens of op(...), operands are %names
+    return re.findall(r"%([\w.\-]+)", argtxt)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        mc = _COMP_RE.match(line)
+        if mc and not line.startswith(" "):
+            cur = Computation(mc.group(1), {}, [])
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(stripped)
+        if not md:
+            continue
+        is_root = stripped.startswith("ROOT")
+        name, rhs = md.group(1), md.group(2)
+        mo = _OP_RE.match(rhs)
+        if not mo:
+            continue
+        out_shape_txt, opcode = mo.group(1), mo.group(2)
+        paren = rhs.find("(", len(mo.group(1)))
+        depth, j = 0, paren
+        for j in range(paren, len(rhs)):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        argtxt = rhs[paren + 1: j]
+        op = Op(name=name, opcode=opcode,
+                out_bytes=_shape_tokens_bytes(out_shape_txt),
+                out_shape_txt=out_shape_txt,
+                operands=_parse_operands(argtxt), line=rhs,
+                is_root=is_root)
+        cur.ops[name] = op
+        cur.order.append(name)
+    if entry and entry != "__entry__":
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * output_elems * contracted_size (batch dims fall out naturally)."""
+    out_elems = _shape_elems(op.out_shape_txt)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_name = op.operands[0]
+    lhs = comp.ops.get(lhs_name)
+    if lhs is None:
+        return 2.0 * out_elems
+    lhs_dims = _dims_of(lhs.out_shape_txt)
+    if not lhs_dims:
+        return 2.0 * out_elems
+    dims = lhs_dims[0]
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx != "" and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = _shape_elems(op.out_shape_txt)
+    if len(op.operands) < 2:
+        return 2.0 * out_elems
+    rhs = comp.ops.get(op.operands[1])
+    if rhs is None:
+        return 2.0 * out_elems
+    kdims = _dims_of(rhs.out_shape_txt)
+    k = 1
+    for d in (kdims[0] if kdims else []):
+        k *= d
+    return 2.0 * out_elems * k  # upper bound (ignores feature grouping)
+
+
+def _root_of(cname: str, comps: Dict[str, "Computation"]) -> Optional["Op"]:
+    comp = comps.get(cname)
+    if comp is None:
+        return None
+    for name in reversed(comp.order):
+        if comp.ops[name].is_root:
+            return comp.ops[name]
+    return comp.ops[comp.order[-1]] if comp.order else None
+
+
+def _slice_update_bytes(root: "Op", comp: "Computation") -> Optional[int]:
+    """Real traffic of an in-place dynamic-update-slice: 2x the update
+    region (read-modify-write of the slice), not the whole buffer."""
+    if root is None:
+        return None
+    if root.opcode == "dynamic-update-slice" and len(root.operands) >= 2:
+        upd = comp.ops.get(root.operands[1])
+        if upd is not None:
+            return 2 * upd.out_bytes
+    if root.opcode == "dynamic-slice":
+        return 2 * root.out_bytes
+    return None
+
+
+def _op_hbm_bytes(op: "Op", comp: "Computation",
+                  comps: Dict[str, "Computation"]) -> int:
+    if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+        upd = comp.ops.get(op.operands[1])
+        if upd is not None:
+            return 2 * upd.out_bytes
+    if op.opcode == "dynamic-slice":
+        return 2 * op.out_bytes
+    if op.opcode == "fusion":
+        sub = _CALLS_RE.search(op.line)
+        if sub:
+            subcomp = comps.get(sub.group(1))
+            if subcomp is not None:
+                alias = _slice_update_bytes(_root_of(sub.group(1), comps),
+                                            subcomp)
+                if alias is not None:
+                    # other (non-aliased) small operands still stream in
+                    small = sum(comp.ops[o].out_bytes for o in op.operands
+                                if o in comp.ops
+                                and comp.ops[o].out_bytes < op.out_bytes // 2)
+                    return alias + small
+    operand_bytes = sum(comp.ops[on].out_bytes
+                        for on in op.operands if on in comp.ops)
+    return op.out_bytes + operand_bytes
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_type: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_by_type[k] += other.coll_by_type[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    mc = _COND_RE.search(op.line)
+    if mc and mc.group(1) in comps:
+        consts = [int(c) for c in _CONST_RE.findall(
+            "\n".join(o.line for o in comps[mc.group(1)].ops.values()))]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _analyze_comp(cname: str, comps: Dict[str, Computation],
+                  memo: Dict[str, Costs], top_level: bool) -> Costs:
+    if cname in memo:
+        return memo[cname]
+    comp = comps.get(cname)
+    cost = Costs()
+    if comp is None:
+        memo[cname] = cost
+        return cost
+    memo[cname] = cost  # break cycles defensively
+    for name in comp.order:
+        op = comp.ops[name]
+        oc = op.opcode
+        # flops
+        if oc == "dot":
+            cost.flops += _dot_flops(op, comp)
+        elif oc == "convolution":
+            cost.flops += _conv_flops(op, comp)
+        # collectives
+        base = None
+        for c in _COLLECTIVES:
+            if oc == c or oc == c + "-start":
+                base = c
+                break
+        if base is not None:
+            operand_bytes = 0
+            for on in op.operands:
+                src = comp.ops.get(on)
+                if src is not None:
+                    operand_bytes += src.out_bytes
+            if operand_bytes == 0:
+                operand_bytes = op.out_bytes  # fallback
+            cost.coll_bytes += operand_bytes
+            cost.coll_by_type[base] += operand_bytes
+            cost.coll_counts[base] += 1
+        # HBM bytes: top-level ops only (fusion boundaries). In-place
+        # slice updates (scan xs/ys/carry plumbing, KV-cache writes) alias
+        # their big operand and only move the slice region — counting the
+        # full buffer per loop trip would overstate scanned models by
+        # orders of magnitude (verified on the xlstm dry-run).
+        if oc not in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+            cost.hbm_bytes += _op_hbm_bytes(op, comp, comps)
+        # recurse into called computations
+        if oc == "while":
+            trips = _trip_count(op, comps)
+            body = _CALLS_RE.search(op.line)
+            if body:
+                cost.add(_analyze_comp(body.group(1), comps, memo, False),
+                         trips)
+        elif oc in ("fusion", "call", "conditional", "map", "reduce",
+                    "reduce-window", "sort", "scatter", "select-and-scatter",
+                    "custom-call", "async-start"):
+            for sub in _CALLS_RE.findall(op.line):
+                subcost = _analyze_comp(sub, comps, memo, False)
+                # fusion-internal ops don't touch HBM; count flops+collectives
+                cost.flops += subcost.flops
+                cost.coll_bytes += subcost.coll_bytes
+                for k in _COLLECTIVES:
+                    cost.coll_by_type[k] += subcost.coll_by_type[k]
+                    cost.coll_counts[k] += subcost.coll_counts[k]
+    return cost
+
+
+def analyze(hlo_text: str) -> Costs:
+    comps = parse_hlo(hlo_text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    return _analyze_comp("__entry__", comps, {}, True)
+
+
+def analyze_dict(hlo_text: str) -> Dict[str, float]:
+    c = analyze(hlo_text)
+    out = {"flops": c.flops, "hbm_bytes": c.hbm_bytes,
+           "collective_bytes": c.coll_bytes}
+    out.update({k: v for k, v in c.coll_by_type.items()})
+    out.update({f"n_{k}": v for k, v in c.coll_counts.items()})
+    return out

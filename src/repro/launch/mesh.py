@@ -1,0 +1,44 @@
+"""Mesh factories. Production target: TPU v5e, 256 chips/pod.
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import
+and then builds these meshes out of host placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# hardware constants (TPU v5e) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    # more devices available than the mesh needs (e.g. 512 placeholders,
+    # single-pod mesh): build from the first n explicitly.
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small mesh over however many host devices exist (tests)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

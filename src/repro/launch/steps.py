@@ -1,0 +1,165 @@
+"""Step builders shared by dryrun / train / serve launchers: construct the
+jit-able step function + in/out shardings + abstract input specs for any
+(architecture x input shape x mesh) pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import rounds
+from repro.models import registry, transformer
+from repro.sharding import plans as plans_lib, specs as specs_lib
+
+SLIDING_WINDOW_LONG = 8192  # dense archs x long_500k: windowed-attention variant
+
+
+def resolve_cfg(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Arch variant per shape: dense full-attention archs get the sliding-
+    window variant for long_500k (DESIGN.md §4)."""
+    if (shape.name == "long_500k" and cfg.causal and not cfg.subquadratic):
+        return dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.kind == "decode" and not cfg.has_decode:
+        return "encoder-only architecture: no autoregressive decode step"
+    return None
+
+
+def round_spec_for(cfg: ModelConfig, shape: ShapeConfig,
+                   plan: specs_lib.ShardingPlan, *, tau: int = 2,
+                   mine_attempts: int = 1024) -> rounds.RoundSpec:
+    m = shape.global_batch // plan.n_clients
+    # L2 (FSDP) giants: per-microbatch weight traffic and in-loop grad
+    # all-reduces dominate — amortize with fewer, larger microbatches
+    # (§Perf iteration K1: kimi collective term 522s -> measured below).
+    mb_size = 32 if plan.fsdp_axes else 8
+    microbatches = max(1, m // mb_size)
+    return rounds.RoundSpec(
+        n_clients=plan.n_clients, tau=tau, eta=1e-3,
+        n_lazy=max(plan.n_clients // 8, 0), sigma2=1e-4,
+        mine_attempts=mine_attempts, difficulty_bits=8,
+        microbatches=microbatches, eval_global_loss=False)
+
+
+# ---------------------------------------------------------------------------
+# Train (BLADE-FL integrated round)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     multi_pod: bool, dtype=jnp.bfloat16,
+                     spec_override: Optional[rounds.RoundSpec] = None,
+                     plan: Optional[specs_lib.ShardingPlan] = None):
+    """Returns (jitted_step, (state_specs, batch_specs) abstract inputs)."""
+    cfg = resolve_cfg(cfg, shape)
+    plan = plan or plans_lib.train_plan(cfg, shape, mesh, multi_pod)
+    rspec = spec_override or round_spec_for(cfg, shape, plan)
+
+    def loss_fn(params, batch):
+        return registry.loss_fn(params, cfg, batch, remat=True)
+
+    round_fn = rounds.make_integrated_round(loss_fn, rspec)
+
+    # --- abstract inputs --------------------------------------------------
+    params_abs = registry.params_specs(cfg, dtype, n_clients=plan.n_clients)
+    key_abs = jax.eval_shape(lambda: jax.random.key(0))
+    state_abs = rounds.RoundState(
+        params=params_abs, key=key_abs,
+        round_idx=jax.ShapeDtypeStruct((), jnp.int32),
+        prev_hash=jax.ShapeDtypeStruct((), jnp.uint32))
+    batch_abs = registry.train_batch_specs(cfg, shape, dtype,
+                                           n_clients=plan.n_clients)
+
+    # --- shardings ---------------------------------------------------------
+    pspecs = specs_lib.param_pspecs(cfg, mesh, plan, params_abs)
+    state_sh = rounds.RoundState(
+        params=specs_lib.to_shardings(mesh, pspecs),
+        key=specs_lib.replicated(mesh),
+        round_idx=specs_lib.replicated(mesh),
+        prev_hash=specs_lib.replicated(mesh))
+    batch_sh = specs_lib.to_shardings(
+        mesh, specs_lib.train_batch_pspecs(cfg, plan, batch_abs))
+    metrics_sh = jax.tree.map(lambda _: specs_lib.replicated(mesh),
+                              {"local_loss_mean": 0, "winner": 0, "pow_hash": 0,
+                               "nonce": 0, "solved": 0, "digest": 0,
+                               "divergence": 0})
+
+    step = jax.jit(round_fn, in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, metrics_sh))
+    return step, (state_abs, batch_abs), plan, rspec
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       multi_pod: bool, dtype=jnp.bfloat16,
+                       plan: Optional[specs_lib.ShardingPlan] = None):
+    cfg = resolve_cfg(cfg, shape)
+    plan = plan or plans_lib.serve_plan(cfg, shape, mesh, multi_pod)
+
+    def prefill_fn(params, batch):
+        return transformer.prefill(params, cfg, batch, max_len=shape.seq_len,
+                                   remat=True)
+
+    params_abs = registry.params_specs(cfg, dtype)
+    batch_abs = registry.prefill_batch_specs(cfg, shape, dtype)
+    pspecs = specs_lib.param_pspecs(cfg, mesh, plan, params_abs)
+    params_sh = specs_lib.to_shardings(mesh, pspecs)
+    batch_sh = specs_lib.to_shardings(
+        mesh, specs_lib.serve_batch_pspecs(plan, batch_abs))
+    step = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+    return step, (params_abs, batch_abs), plan
+
+
+# ---------------------------------------------------------------------------
+# Serve: single-token decode
+# ---------------------------------------------------------------------------
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      multi_pod: bool, dtype=jnp.bfloat16,
+                      plan: Optional[specs_lib.ShardingPlan] = None):
+    cfg = resolve_cfg(cfg, shape)
+    plan = plan or plans_lib.serve_plan(cfg, shape, mesh, multi_pod)
+
+    def decode_fn(params, state, token, pos):
+        return transformer.decode_step(params, cfg, state, token, pos)
+
+    params_abs = registry.params_specs(cfg, dtype)
+    dec = registry.decode_input_specs(cfg, shape, dtype)
+    state_abs, token_abs, pos_abs = dec["state"], dec["token"], dec["pos"]
+
+    pspecs = specs_lib.param_pspecs(cfg, mesh, plan, params_abs)
+    params_sh = specs_lib.to_shardings(mesh, pspecs)
+    state_sh = specs_lib.to_shardings(
+        mesh, specs_lib.decode_state_pspecs(cfg, mesh, plan, state_abs))
+    token_sh = NamedSharding(mesh, P(plan.batch_axes if plan.batch_axes else None))
+    pos_sh = specs_lib.replicated(mesh)
+    logits_sh = NamedSharding(
+        mesh, P(plan.batch_axes if plan.batch_axes else None,
+                "model" if cfg.vocab % mesh.shape["model"] == 0 else None))
+    step = jax.jit(decode_fn,
+                   in_shardings=(params_sh, state_sh, token_sh, pos_sh),
+                   out_shardings=(logits_sh, state_sh))
+    return step, (params_abs, state_abs, token_abs, pos_abs), plan
+
+
+def build_step(kind: str, cfg, shape, mesh, multi_pod, dtype=jnp.bfloat16):
+    if kind == "train":
+        step, abs_in, plan, _ = build_train_step(cfg, shape, mesh, multi_pod, dtype)
+        return step, abs_in, plan
+    if kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, multi_pod, dtype)
+    return build_decode_step(cfg, shape, mesh, multi_pod, dtype)

@@ -1,0 +1,366 @@
+"""Attention: GQA (with qk-norm, sliding window, prefix-LM masks) and
+DeepSeek-style MLA, each with full-sequence forward and single-step decode.
+
+KV caches:
+  GQA   : {"k": [B, S_cache, Hkv, hd], "v": [B, S_cache, Hkv, hd]}
+          (S_cache = sliding_window when windowed: ring buffer)
+  MLA   : {"ckv": [B, S_cache, kv_lora], "k_rope": [B, S_cache, rope_dim]}
+
+Decode attention over a sequence-sharded cache relies on XLA-SPMD partial
+softmax reductions (max/sum over the sharded length axis lower to
+all-reduces); see DESIGN.md §3 and the roofline notes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        m = cfg.mla
+        p = {
+            "w_dkv": layers.dense_init(ks[0], d, m.kv_lora + m.rope_dim, dtype),
+            "kv_norm": layers.rms_norm_init(m.kv_lora, dtype),
+            "w_uk": layers.dense_init(ks[1], m.kv_lora, cfg.n_heads * hd, dtype),
+            "w_uv": layers.dense_init(ks[2], m.kv_lora, cfg.n_heads * hd, dtype),
+            "w_o": layers.dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+        }
+        if m.q_lora:
+            p["w_dq"] = layers.dense_init(ks[4], d, m.q_lora, dtype)
+            p["q_norm"] = layers.rms_norm_init(m.q_lora, dtype)
+            p["w_uq"] = layers.dense_init(ks[5], m.q_lora, cfg.n_heads * (hd + m.rope_dim), dtype)
+        else:
+            p["w_uq"] = layers.dense_init(ks[5], d, cfg.n_heads * (hd + m.rope_dim), dtype)
+        return p
+    p = {
+        "w_q": layers.dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "w_k": layers.dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "w_v": layers.dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "w_o": layers.dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rms_norm_init(hd, dtype)
+        p["k_norm"] = layers.rms_norm_init(hd, dtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, s, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, s, m.rope_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def build_mask(seq: int, *, causal: bool, prefix_len: int = 0,
+               sliding_window: int = 0) -> jnp.ndarray:
+    """[seq, seq] additive mask (0 or NEG_INF)."""
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    if causal:
+        ok = j <= i
+        if prefix_len:
+            ok = ok | ((i < prefix_len) & (j < prefix_len))
+        if sliding_window:
+            ok = ok & (j > i - sliding_window)
+    else:
+        ok = jnp.ones((seq, seq), bool)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (shared by GQA / MLA paths)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: [B,S,H,hd]; k,v: [B,T,H,hd]; mask: [S,T] or [B,S,T] additive."""
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    logits = logits + (mask if mask.ndim == 2 else mask[:, None])
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+# S above which the XLA (non-Pallas) path switches to the q-chunked form
+SDPA_CHUNK_THRESHOLD = 4096
+SDPA_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, scale, *, causal: bool, window: int,
+                  prefix_len: int, chunk: int = SDPA_CHUNK):
+    """Flash-style attention in pure XLA (§Perf iteration A1): scan over
+    query chunks so the score matrix is [B,H,chunk,S] instead of
+    [B,H,S,S], and the mask is built per chunk from index arithmetic
+    instead of materializing [S,S]. Numerics identical to _sdpa (full-row
+    softmax per chunk). Used for S >= SDPA_CHUNK_THRESHOLD — at 32k the
+    full form needs TBs of temp per device; the Pallas kernel
+    (kernels/flash_attention) is the TPU production path, this is the
+    compile-anywhere fallback with the same memory shape."""
+    b, s, h, hd = q.shape
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+    qs = q.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    cols = jnp.arange(s)
+
+    def one_chunk(carry, inp):
+        qc, ci = inp                                  # [B,chunk,H,hd], scalar
+        rows = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bshd,bthd->bhst", qc, k).astype(jnp.float32) * scale
+        ok = jnp.ones((chunk, s), bool)
+        if causal:
+            ok = cols[None, :] <= rows[:, None]
+            if prefix_len:
+                ok = ok | ((rows[:, None] < prefix_len) & (cols[None, :] < prefix_len))
+            if window > 0:
+                ok = ok & (cols[None, :] > rows[:, None] - window)
+        logits = jnp.where(ok[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, 0,
+                           (qs, jnp.arange(n_chunks, dtype=jnp.int32)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_sdpa(q, kk, vv, scale, mask_info: dict):
+    """Dense [S,S]-mask SDPA for short sequences; q-chunked online form for
+    long ones (never materializes [S,S] scores or mask)."""
+    s = q.shape[1]
+    if s < SDPA_CHUNK_THRESHOLD:
+        mask = build_mask(s, causal=mask_info["causal"],
+                          prefix_len=mask_info.get("prefix_len", 0),
+                          sliding_window=mask_info.get("window", 0))
+        return _sdpa(q, kk, vv, mask, scale)
+    return _sdpa_chunked(q, kk, vv, scale, causal=mask_info["causal"],
+                         window=mask_info.get("window", 0),
+                         prefix_len=mask_info.get("prefix_len", 0))
+
+
+def gqa_forward(params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+                mask_info: dict) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence forward. Returns (out, kv) where kv feeds cache fill."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["w_k"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rms_norm(params["k_norm"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = _dispatch_sdpa(q, _repeat_kv(k, cfg.n_heads),
+                         _repeat_kv(v, cfg.n_heads), hd ** -0.5, mask_info)
+    out = out.reshape(b, s, cfg.n_heads * hd) @ params["w_o"]
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, pos: jnp.ndarray,
+               cache: dict, cache_len: Optional[int] = None):
+    """Single-token decode. x_t: [B, d]; pos: scalar int32 (current position).
+
+    Cache is a ring buffer when cfg.sliding_window > 0 (S_cache == window).
+    Attention masks out unwritten / out-of-window slots by comparing each
+    slot's stored absolute position.
+    """
+    b = x_t.shape[0]
+    hd = cfg.resolved_head_dim
+    s_cache = cache["k"].shape[1]
+    q = (x_t @ params["w_q"]).reshape(b, 1, cfg.n_heads, hd)
+    k = (x_t @ params["w_k"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = (x_t @ params["w_v"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rms_norm(params["k_norm"], k, cfg.norm_eps)
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+    slot = (pos % s_cache) if cfg.sliding_window else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    # absolute position stored in each slot (ring-buffer aware)
+    idx = jnp.arange(s_cache)
+    if cfg.sliding_window:
+        wraps = (pos // s_cache) + (idx <= (pos % s_cache))  # completed writes
+        abs_pos = (wraps - 1) * s_cache + idx
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.sliding_window)
+    else:
+        valid = idx <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)  # [T]
+    kk = _repeat_kv(new_k, cfg.n_heads)
+    vv = _repeat_kv(new_v, cfg.n_heads)
+    logits = jnp.einsum("bohd,bthd->bhot", q, kk).astype(jnp.float32) * hd ** -0.5
+    logits = logits + mask[None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhot,bthd->bohd", probs, vv)
+    out = out.reshape(b, cfg.n_heads * hd) @ params["w_o"]
+    return out, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(params, cfg, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    m = cfg.mla
+    if m.q_lora:
+        cq = layers.rms_norm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+        q = (cq @ params["w_uq"]).reshape(b, s, cfg.n_heads, hd + m.rope_dim)
+    else:
+        q = (x @ params["w_uq"]).reshape(b, s, cfg.n_heads, hd + m.rope_dim)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv(params, cfg, x, positions):
+    m = cfg.mla
+    dkv = x @ params["w_dkv"]
+    ckv = layers.rms_norm(params["kv_norm"], dkv[..., : m.kv_lora], cfg.norm_eps)
+    k_rope = layers.apply_rope(dkv[..., m.kv_lora:][..., None, :], positions,
+                               cfg.rope_theta)[..., 0, :]
+    return ckv, k_rope
+
+
+def _mla_attend(params, cfg, q_nope, q_rope, ckv, k_rope, mask):
+    """Latent-space attention: scores via absorbed projections.
+
+    q_nope: [B,S,H,hd]; q_rope: [B,S,H,r]; ckv: [B,T,kv_lora]; k_rope: [B,T,r].
+    """
+    b, s, h, hd = q_nope.shape
+    m = cfg.mla
+    w_uk = params["w_uk"].reshape(m.kv_lora, h, hd)
+    # absorb W_uk into the query: q_lat [B,S,H,kv_lora]
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)
+    scores = jnp.einsum("bshl,btl->bhst", q_lat, ckv)
+    scores = scores + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+    scale = (hd + m.rope_dim) ** -0.5
+    scores = scores.astype(jnp.float32) * scale
+    scores = scores + (mask if mask.ndim == 2 else mask[:, None])
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    # values in latent space, then up-project: [B,S,H,kv_lora] -> [B,S,H,hd]
+    o_lat = jnp.einsum("bhst,btl->bshl", probs, ckv)
+    w_uv = params["w_uv"].reshape(m.kv_lora, h, hd)
+    out = jnp.einsum("bshl,lhd->bshd", o_lat, w_uv)
+    return out.reshape(b, s, h * hd) @ params["w_o"]
+
+
+def _mla_attend_materialized(params, cfg, q_nope, q_rope, ckv, k_rope,
+                             mask_info: dict):
+    """Training/prefill form: reconstruct per-head K/V from the latent ONCE
+    (O(S) up-projections), then standard SDPA — the S^2 score/value terms
+    cost H*(hd+rope) = 192 per pair instead of the absorbed form's
+    H*(kv_lora+rope) = 576. DeepSeek-V2 absorbs only at decode, where the
+    latent cache (not flops) is the win; doing the same here cut the
+    compiled train-step FLOPs ~2.8x (EXPERIMENTS.md §Perf iteration D1)."""
+    b, s, h, hd = q_nope.shape
+    m = cfg.mla
+    w_uk = params["w_uk"].reshape(m.kv_lora, h, hd)
+    w_uv = params["w_uv"].reshape(m.kv_lora, h, hd)
+    k_nope = jnp.einsum("btl,lhd->bthd", ckv, w_uk)
+    v = jnp.einsum("btl,lhd->bthd", ckv, w_uv)
+    scale = (hd + m.rope_dim) ** -0.5
+    # fold the decoupled-rope key into the head dim so the chunked SDPA
+    # dispatcher handles short and long sequences uniformly
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, k_rope.shape[1], h, m.rope_dim))], axis=-1)
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, m.rope_dim)))
+    out = _dispatch_sdpa(q_cat, k_cat, v_pad, scale, mask_info)[..., :hd]
+    return out.reshape(b, s, h * hd) @ params["w_o"]
+
+
+def mla_forward(params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+                mask_info: dict, *, absorbed: Optional[bool] = None):
+    import os as _os
+
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, k_rope = _mla_kv(params, cfg, x, positions)
+    if absorbed is None:
+        absorbed = _os.environ.get("REPRO_MLA_ABSORBED", "0") == "1"
+    if absorbed:  # ablation path (D1 baseline): dense mask, latent scores
+        mask = build_mask(x.shape[1], causal=mask_info["causal"],
+                          prefix_len=mask_info.get("prefix_len", 0),
+                          sliding_window=mask_info.get("window", 0))
+        out = _mla_attend(params, cfg, q_nope, q_rope, ckv, k_rope, mask)
+    else:
+        out = _mla_attend_materialized(params, cfg, q_nope, q_rope, ckv,
+                                       k_rope, mask_info)
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, pos: jnp.ndarray,
+               cache: dict):
+    b = x_t.shape[0]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x_t[:, None, :], posv)
+    ckv_t, k_rope_t = _mla_kv(params, cfg, x_t[:, None, :], posv)
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, pos, axis=1)
+    new_kr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_t, pos, axis=1)
+    t = new_ckv.shape[1]
+    mask = jnp.where(jnp.arange(t) <= pos, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    out = _mla_attend(params, cfg, q_nope, q_rope, new_ckv, new_kr, mask)
+    return out[:, 0, :], {"ckv": new_ckv, "k_rope": new_kr}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def attn_forward(params, cfg, x, positions, mask_info):
+    if cfg.mla is not None:
+        return mla_forward(params, cfg, x, positions, mask_info)
+    return gqa_forward(params, cfg, x, positions, mask_info)
+
+
+def attn_decode(params, cfg, x_t, pos, cache):
+    if cfg.mla is not None:
+        return mla_decode(params, cfg, x_t, pos, cache)
+    return gqa_decode(params, cfg, x_t, pos, cache)

@@ -1,0 +1,32 @@
+"""Paper §7.1 experimental model: MLP with one 256-unit hidden layer + ReLU,
+10-class softmax (MNIST / Fashion-MNIST shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mlp(key, in_dim: int = 784, hidden: int = 256, n_classes: int = 10,
+             dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": layers.dense_init(k1, in_dim, hidden, dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": layers.dense_init(k2, hidden, n_classes, dtype),
+        "b2": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def mlp_logits(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    """batch: {"x": [B, in_dim], "y": [B] int32} -> (loss, metrics)."""
+    logits = mlp_logits(params, batch["x"])
+    loss = layers.softmax_cross_entropy(logits, batch["y"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"accuracy": acc}

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts MLP with capacity-based scatter dispatch.
+
+Expert weights are stacked [E, ...] and sharded over the 'model' mesh axis
+(expert parallelism). Dispatch scatters tokens into per-expert slots
+[E, C, D]; XLA-SPMD partitions the scatter/gather onto expert shards and the
+combine gather lowers to a masked local gather + all-reduce — the
+all-to-all-like collective the roofline tracks for MoE archs.
+
+Slot assignment loops over the k routing choices (k <= 8) so the transient
+one-hot is only [T, E] per step (never [T, E, C]).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    scale = d ** -0.5
+
+    def stack(k, e, din, dout):
+        return (jax.random.normal(k, (e, din, dout)) * scale).astype(dtype)
+
+    p = {
+        "router": layers.dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "w_in": stack(ks[1], m.n_experts, d, m.d_ff),
+        "w_out": stack(ks[2], m.n_experts, m.d_ff, d),
+    }
+    if gated:
+        p["w_gate"] = stack(ks[3], m.n_experts, d, m.d_ff)
+    if m.n_shared:
+        p["shared"] = layers.mlp_init(ks[4], d, m.n_shared * m.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _expert_ffn(p, h: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """h: [E, C, D] -> [E, C, D] through per-expert FFN (batched einsum)."""
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_in"])
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        up = act(jnp.einsum("ecd,edf->ecf", h, p["w_gate"])) * up
+    elif kind == "squared_relu":
+        up = jnp.square(jax.nn.relu(up))
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, p["w_out"])
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(t * m.top_k * m.capacity_factor / m.n_experts), 4)
+
+    # --- slot assignment, one routing choice at a time --------------------
+    counts = jnp.zeros((m.n_experts,), jnp.int32)
+    slot_list, keep_list = [], []
+    for j in range(m.top_k):
+        e_j = gate_idx[:, j]                                   # [T]
+        onehot = jax.nn.one_hot(e_j, m.n_experts, dtype=jnp.int32)
+        ranks = jnp.cumsum(onehot, axis=0) - 1                 # rank among this choice
+        slot = jnp.take_along_axis(ranks, e_j[:, None], axis=1)[:, 0] + counts[e_j]
+        keep = slot < capacity
+        slot_list.append(jnp.where(keep, slot, capacity))      # cap as scratch slot
+        keep_list.append(keep)
+        counts = counts + onehot.sum(axis=0)
+    slots = jnp.stack(slot_list, 1)                            # [T, k]
+    keeps = jnp.stack(keep_list, 1)                            # [T, k]
+
+    # --- dispatch: scatter tokens into [E, C+1, D] (slot C = overflow bin) -
+    buf = jnp.zeros((m.n_experts, capacity + 1, d), x.dtype)
+    flat_e = gate_idx.reshape(-1)
+    flat_slot = slots.reshape(-1)
+    flat_x = jnp.repeat(xt[:, None, :], m.top_k, axis=1).reshape(-1, d)
+    buf = buf.at[flat_e, flat_slot].set(flat_x, mode="drop")
+    expert_out = _expert_ffn(params, buf[:, :capacity], cfg.mlp)  # [E, C, D]
+    expert_out = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))    # overflow -> 0
+
+    # --- combine: gather back, weight by (renormalized) gates -------------
+    gathered = expert_out[flat_e, flat_slot].reshape(t, m.top_k, d)
+    w = (gate_vals * keeps.astype(gate_vals.dtype)).astype(x.dtype)
+    out = jnp.einsum("tkd,tk->td", gathered, w)
+
+    if m.n_shared:
+        out = out + layers.mlp_apply(params["shared"], xt, cfg.mlp)
+
+    # --- load-balance aux loss (Switch-style) ------------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], m.n_experts, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_weight
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,136 @@
+"""Uniform model API over all assigned architectures + batch spec builders.
+
+``input_specs(cfg, shape, ...)`` returns jax.ShapeDtypeStruct stand-ins for
+every model input of a given (architecture x input-shape) pair — the dry-run
+lowers against these without allocating anything (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    return transformer.init_lm(key, cfg, dtype)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True,
+            loss_chunk: int = 0):
+    return transformer.train_loss(params, cfg, batch, remat=remat,
+                                  loss_chunk=loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Concrete batch builders (tests / examples, small shapes)
+# ---------------------------------------------------------------------------
+
+
+def make_train_batch(key, cfg: ModelConfig, shape: ShapeConfig,
+                     dtype=jnp.float32) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "vlm":
+        p = cfg.vlm_prefix_len
+        return {
+            "patches": jax.random.normal(k1, (b, p, cfg.d_model), dtype),
+            "tokens": jax.random.randint(k2, (b, s - p), 0, cfg.vocab),
+        }
+    if cfg.audio_frontend:
+        mask = jax.random.bernoulli(k2, 0.08, (b, s))
+        return {
+            "frames": jax.random.normal(k1, (b, s, cfg.d_model), dtype),
+            "mask_positions": mask,
+            "targets": jax.random.randint(k3, (b, s), 0, cfg.vocab),
+        }
+    return {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab)}
+
+
+def make_prefill_batch(key, cfg: ModelConfig, shape: ShapeConfig,
+                       dtype=jnp.float32) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "vlm":
+        p = cfg.vlm_prefix_len
+        return {
+            "patches": jax.random.normal(k1, (b, p, cfg.d_model), dtype),
+            "tokens": jax.random.randint(k2, (b, s - p), 0, cfg.vocab),
+        }
+    if cfg.audio_frontend:
+        return {"frames": jax.random.normal(k1, (b, s, cfg.d_model), dtype)}
+    return {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab)}
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct specs (dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16,
+                      n_clients: int = 1) -> Dict[str, Any]:
+    """Training batch specs. With n_clients > 1 the batch carries a leading
+    client axis [C, B/C, ...] (BLADE-FL: clients own disjoint local data)."""
+    b, s = shape.global_batch, shape.seq_len
+    assert b % n_clients == 0, (b, n_clients)
+    lead = (n_clients, b // n_clients) if n_clients > 1 else (b,)
+    if cfg.family == "vlm":
+        p = cfg.vlm_prefix_len
+        return {
+            "patches": _sds(lead + (p, cfg.d_model), dtype),
+            "tokens": _sds(lead + (s - p,), jnp.int32),
+        }
+    if cfg.audio_frontend:
+        return {
+            "frames": _sds(lead + (s, cfg.d_model), dtype),
+            "mask_positions": _sds(lead + (s,), jnp.bool_),
+            "targets": _sds(lead + (s,), jnp.int32),
+        }
+    return {"tokens": _sds(lead + (s,), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        p = cfg.vlm_prefix_len
+        return {
+            "patches": _sds((b, p, cfg.d_model), dtype),
+            "tokens": _sds((b, s - p), jnp.int32),
+        }
+    if cfg.audio_frontend:
+        return {"frames": _sds((b, s, cfg.d_model), dtype)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    state = jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, batch, max_len, dtype))
+    return state
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": _sds((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "state": decode_state_specs(cfg, b, s, dtype),
+    }
+
+
+def params_specs(cfg: ModelConfig, dtype=jnp.bfloat16, n_clients: int = 1):
+    """abstract param shapes; with client axis when n_clients > 1."""
+    p = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg, dtype))
+    if n_clients > 1:
+        p = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((n_clients,) + a.shape, a.dtype), p)
+    return p

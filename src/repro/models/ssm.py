@@ -1,0 +1,123 @@
+"""Mamba (S6) selective-state-space block: full-sequence scan + decode step.
+
+State layout for decode: {"conv": [B, W-1, d_in], "h": [B, d_in, d_state]}.
+The sequence recurrence uses lax.scan over time — TPU-friendly (small HLO,
+bounded memory) where the GPU original fuses a parallel scan kernel; the
+chunked-parallel variant is a §Perf lever (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return s, d_in, dt_rank
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d_in, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_in, s.d_state)))
+    return {
+        "w_in": layers.dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "conv": layers.causal_conv_init(ks[1], d_in, s.d_conv, dtype),
+        "w_x": layers.dense_init(ks[2], d_in, dt_rank + 2 * s.d_state, dtype),
+        "w_dt": layers.dense_init(ks[3], dt_rank, d_in, dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, dtype),  # softplus^-1(0.01)-ish
+        "a_log": a_init.astype(dtype),
+        "d_skip": jnp.ones((d_in,), dtype),
+        "w_out": layers.dense_init(ks[4], d_in, cfg.d_model, dtype),
+    }
+
+
+def _use_scan_kernel() -> bool:
+    import os
+    return os.environ.get("REPRO_SSM_KERNEL", "0") == "1"
+
+
+def _ssm_inner(params, cfg: ModelConfig, u: jnp.ndarray):
+    """u: [B, T, d_in] (post conv+silu). Returns y: [B, T, d_in], final h.
+
+    Default: lax.scan over time (state round-trips HBM every step — the
+    jamba dry-run's dominant memory term). REPRO_SSM_KERNEL=1 switches to
+    the VMEM-resident Pallas kernel (kernels/ssm_scan) on TPU.
+    """
+    s, d_in, dt_rank = _dims(cfg)
+    proj = u @ params["w_x"]  # [B, T, dt_rank + 2*ds]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ params["w_dt"]
+                         + params["dt_bias"])                      # [B,T,d_in]
+    bmat = proj[..., dt_rank: dt_rank + s.d_state]                 # [B,T,ds]
+    cmat = proj[..., dt_rank + s.d_state:]                         # [B,T,ds]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))              # [d_in,ds]
+
+    if _use_scan_kernel():
+        from repro.kernels.ssm_scan import selective_scan
+        y, h_final = selective_scan(u, dt, bmat, cmat, a,
+                                    params["d_skip"].astype(jnp.float32))
+        return y.astype(u.dtype), h_final
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a)                          # [B,d_in,ds]
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((u.shape[0], d_in, s.d_state), jnp.float32)
+    xs = (u.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1),
+          bmat.swapaxes(0, 1).astype(jnp.float32), cmat.swapaxes(0, 1).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + u * params["d_skip"]
+    return y.astype(u.dtype), h_final
+
+
+def ssm_forward(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, T, D] -> (out [B, T, D], final state dict)."""
+    s, d_in, _ = _dims(cfg)
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(layers.causal_conv_apply(params["conv"], u))
+    y, h = _ssm_inner(params, cfg, u)
+    out = (y * jax.nn.silu(z)) @ params["w_out"]
+    # conv state holds the PRE-activation conv inputs (last W-1 raw u values)
+    u_raw, _ = jnp.split(xz, 2, axis=-1)
+    pad = jnp.pad(u_raw, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    conv_state = pad[:, -(s.d_conv - 1):, :]
+    return out, {"conv": conv_state, "h": h}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, state: dict):
+    """x_t: [B, D] single step."""
+    s, d_in, dt_rank = _dims(cfg)
+    xz = x_t @ params["w_in"]
+    u_raw, z = jnp.split(xz, 2, axis=-1)
+    u_c, conv_state = layers.causal_conv_step(params["conv"], state["conv"], u_raw)
+    u = jax.nn.silu(u_c)
+    proj = u @ params["w_x"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ params["w_dt"] + params["dt_bias"])
+    b_t = proj[..., dt_rank: dt_rank + s.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    h = da * state["h"] + (dt * u).astype(jnp.float32)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t).astype(x_t.dtype) + u * params["d_skip"]
+    out = (y * jax.nn.silu(z)) @ params["w_out"]
+    return out, {"conv": conv_state, "h": h}

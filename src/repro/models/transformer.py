@@ -1,0 +1,434 @@
+"""Unified model: decoder LMs (dense/MoE/MLA), hybrid SSM stacks, xLSTM,
+encoder-only (audio), and prefix-LM VLM — one init/apply family driven by
+ModelConfig.
+
+Layer layout: ``n_dense_prefix`` unrolled blocks, then the remaining layers
+grouped into periods of ``cfg.pattern`` and scanned with lax.scan (stacked
+params, leading axis = n_periods). This keeps the HLO small enough to compile
+64-layer models on the 512-device dry-run mesh, and remat (jax.checkpoint) on
+the period body bounds activation memory.
+
+Public API:
+  init_lm(key, cfg, dtype)                       -> params
+  train_loss(params, cfg, batch)                 -> (loss, metrics)
+  prefill(params, cfg, batch)                    -> (logits_last, decode_state)
+  decode_step(params, cfg, state, token, pos)    -> (logits, state)
+  init_decode_state(cfg, batch, max_len, dtype)  -> state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib, xlstm as xlstm_lib
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _n_periods(cfg: ModelConfig) -> int:
+    body = cfg.n_layers - cfg.n_dense_prefix
+    pat = len(cfg.pattern)
+    assert body % pat == 0, f"{cfg.name}: {body} layers not divisible by pattern {pat}"
+    return body // pat
+
+
+def _uses_moe(cfg: ModelConfig, layer_idx: int) -> bool:
+    if cfg.moe is None or layer_idx < cfg.n_dense_prefix:
+        return False
+    return layer_idx % cfg.moe.every == cfg.moe.every - 1
+
+
+def _kind_at(cfg: ModelConfig, layer_idx: int) -> str:
+    if layer_idx < cfg.n_dense_prefix:
+        return "attn"
+    j = (layer_idx - cfg.n_dense_prefix) % len(cfg.pattern)
+    return cfg.pattern[j]
+
+
+def _check_static_period(cfg: ModelConfig) -> None:
+    """MoE placement must be identical in every period so params can stack."""
+    if cfg.moe is not None and cfg.moe.every > 1:
+        assert len(cfg.pattern) % cfg.moe.every == 0 or len(cfg.pattern) == 1, (
+            f"{cfg.name}: moe.every={cfg.moe.every} incompatible with "
+            f"pattern length {len(cfg.pattern)}")
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "attn": attention.init_attention,
+    "ssm": ssm_lib.init_ssm,
+    "mlstm": xlstm_lib.init_mlstm,
+    "slstm": xlstm_lib.init_slstm,
+}
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, use_moe: bool, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "norm1": layers.rms_norm_init(cfg.d_model, dtype),
+        "mixer": _MIXER_INIT[kind](k1, cfg, dtype),
+    }
+    if use_moe:
+        p["norm2"] = layers.rms_norm_init(cfg.d_model, dtype)
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["norm2"] = layers.rms_norm_init(cfg.d_model, dtype)
+        p["mlp"] = layers.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _block_forward(p: Params, cfg: ModelConfig, kind: str, x, positions, mask,
+                   want_cache: bool):
+    """Full-sequence block. Returns (x, aux, cache_or_None)."""
+    h = layers.rms_norm(p["norm1"], x, cfg.norm_eps)
+    cache = None
+    if kind == "attn":
+        out, kv = attention.attn_forward(p["mixer"], cfg, h, positions, mask)
+        if want_cache:
+            cache = kv
+    elif kind == "ssm":
+        out, st = ssm_lib.ssm_forward(p["mixer"], cfg, h)
+        if want_cache:
+            cache = st
+    elif kind == "mlstm":
+        out, st = xlstm_lib.mlstm_forward(p["mixer"], cfg, h)
+        if want_cache:
+            cache = st
+    else:  # slstm
+        out, st = xlstm_lib.slstm_forward(p["mixer"], cfg, h)
+        if want_cache:
+            cache = st
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h2 = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
+        out2, aux = moe_lib.moe_apply(p["moe"], cfg, h2)
+        x = x + out2
+    elif "mlp" in p:
+        h2 = layers.rms_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+    return x, aux, cache
+
+
+def _block_decode(p: Params, cfg: ModelConfig, kind: str, x_t, pos, cache):
+    h = layers.rms_norm(p["norm1"], x_t, cfg.norm_eps)
+    if kind == "attn":
+        out, cache = attention.attn_decode(p["mixer"], cfg, h, pos, cache)
+    elif kind == "ssm":
+        out, cache = ssm_lib.ssm_decode(p["mixer"], cfg, h, cache)
+    elif kind == "mlstm":
+        out, cache = xlstm_lib.mlstm_decode(p["mixer"], cfg, h, cache)
+    else:
+        out, cache = xlstm_lib.slstm_decode(p["mixer"], cfg, h, cache)
+    x_t = x_t + out
+    if "moe" in p:
+        h2 = layers.rms_norm(p["norm2"], x_t, cfg.norm_eps)
+        out2, _ = moe_lib.moe_apply(p["moe"], cfg, h2[:, None, :])
+        x_t = x_t + out2[:, 0, :]
+    elif "mlp" in p:
+        h2 = layers.rms_norm(p["norm2"], x_t, cfg.norm_eps)
+        x_t = x_t + layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+    return x_t, cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    _check_static_period(cfg)
+    n_per = _n_periods(cfg)
+    pat = cfg.pattern
+    keys = jax.random.split(key, 4 + cfg.n_dense_prefix)
+    params: Params = {
+        "embed": layers.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": layers.rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.audio_frontend:
+        params["mask_emb"] = (jax.random.normal(keys[2], (cfg.d_model,)) * 0.02).astype(dtype)
+        params["pos_conv"] = layers.causal_conv_init(keys[3], cfg.d_model, 4, dtype)
+    # unrolled dense-prefix blocks
+    prefix = []
+    for i in range(cfg.n_dense_prefix):
+        prefix.append(_init_block(keys[4 + i], cfg, "attn", False, dtype))
+    if prefix:
+        params["prefix"] = prefix
+    # scanned periods: for each j in pattern, stack block params over periods
+    period: Dict[str, Params] = {}
+    for j, kind in enumerate(pat):
+        layer0 = cfg.n_dense_prefix + j
+        use_moe = _uses_moe(cfg, layer0)
+        subkeys = jax.random.split(jax.random.fold_in(key, 1000 + j), n_per)
+        blocks = [_init_block(subkeys[p], cfg, kind, use_moe, dtype)
+                  for p in range(n_per)]
+        period[f"j{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params["period"] = period
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Input assembly
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Returns (x [B,S,D], labels or None, loss_mask or None)."""
+    emb = params["embed"]
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(emb.dtype)       # [B, P, D]
+        tokens = batch["tokens"]                           # [B, S_txt]
+        tok_emb = emb[tokens]
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        labels = batch.get("labels")
+        if labels is not None:
+            b, p, _ = patches.shape
+            pad = jnp.zeros((b, p), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((b, p), jnp.float32), jnp.ones_like(batch["labels"], jnp.float32)],
+                axis=1)
+            return x, labels, mask
+        return x, None, None
+    if cfg.audio_frontend:
+        frames = batch["frames"].astype(emb.dtype)          # [B, S, D]
+        if "mask_positions" in batch:
+            m = batch["mask_positions"][..., None].astype(emb.dtype)
+            frames = frames * (1 - m) + params["mask_emb"] * m
+        x = frames + layers.causal_conv_apply(params["pos_conv"], frames)
+        labels = batch.get("targets")
+        mask = batch.get("mask_positions")
+        mask = mask.astype(jnp.float32) if mask is not None else None
+        return x, labels, mask
+    tokens = batch["tokens"]
+    return emb[tokens], batch.get("labels"), batch.get("loss_mask")
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+            want_cache: bool = False, remat: bool = True,
+            sliding_window: Optional[int] = None):
+    """x: [B, S, D] embeddings -> (hidden [B,S,D], aux, caches)."""
+    b, s, _ = x.shape
+    window = cfg.sliding_window if sliding_window is None else sliding_window
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    # mask described symbolically; attention materializes a dense [S,S]
+    # mask only below the chunked-SDPA threshold (A1)
+    mask = {
+        "causal": cfg.causal,
+        "prefix_len": cfg.vlm_prefix_len if cfg.family == "vlm" else 0,
+        "window": window,
+    }
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_caches = []
+    for blk in params.get("prefix", []):
+        x, aux, c = _block_forward(blk, cfg, "attn", x, positions, mask, want_cache)
+        aux_total = aux_total + aux
+        prefix_caches.append(c)
+
+    pat = cfg.pattern
+
+    def period_body(carry, period_params):
+        x, aux_acc = carry
+        caches = {}
+        for j, kind in enumerate(pat):
+            x, aux, c = _block_forward(period_params[f"j{j}"], cfg, kind, x,
+                                       positions, mask, want_cache)
+            aux_acc = aux_acc + aux
+            if want_cache:
+                caches[f"j{j}"] = c
+        return (x, aux_acc), caches if want_cache else None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux_total), period_caches = jax.lax.scan(
+        body, (x, aux_total), params["period"])
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total, {"prefix": prefix_caches, "period": period_caches}
+
+
+def _lm_head(params: Params, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, h, labels, loss_mask,
+                    chunk: int = 0):
+    """Cross-entropy without materializing [B, S, V]: scan over seq chunks."""
+    b, s, d = h.shape
+    if chunk <= 0:
+        # pick chunk so B*chunk*V*4 bytes <~ 256MB
+        chunk = max(1, min(s, int(256e6 / max(b * cfg.vocab * 4, 1))))
+        while s % chunk:
+            chunk -= 1
+    n_chunks = s // chunk
+    hs = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if loss_mask is None:
+        loss_mask = jnp.ones((b, s), jnp.float32)
+    ms = loss_mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        hc, lc, mc = inp
+        logits = _lm_head(params, cfg, hc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Train loss
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+               *, remat: bool = True, loss_chunk: int = 0):
+    """Causal-LM / prefix-LM / masked-prediction loss depending on family."""
+    if cfg.family == "vlm":
+        tokens = batch["tokens"]
+        b = {"patches": batch["patches"], "tokens": tokens[:, :-1],
+             "labels": tokens[:, 1:]}
+        # label at position p predicts tokens[p+1]; image prefix predicts first text token
+        x, labels, mask = _embed_inputs(params, cfg, b)
+    elif cfg.audio_frontend:
+        x, labels, mask = _embed_inputs(params, cfg, batch)
+    else:
+        tokens = batch["tokens"]
+        x, _, _ = _embed_inputs(params, cfg, {"tokens": tokens[:, :-1]})
+        labels = tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            mask = mask[:, 1:]
+    h, aux, _ = forward(params, cfg, x, want_cache=False, remat=remat)
+    ce = chunked_ce_loss(params, cfg, h, labels, mask, loss_chunk)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_struct(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if kind == "ssm":
+        return ssm_lib.init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_state(cfg, batch, dtype)
+    return xlstm_lib.init_slstm_state(cfg, batch, dtype)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    n_per = _n_periods(cfg)
+    state: Params = {}
+    if cfg.n_dense_prefix:
+        state["prefix"] = [
+            _cache_struct(cfg, "attn", batch, max_len, dtype)
+            for _ in range(cfg.n_dense_prefix)
+        ]
+    period = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = _cache_struct(cfg, kind, batch, max_len, dtype)
+        period[f"j{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_per,) + a.shape).copy(), one)
+    state["period"] = period
+    return state
+
+
+def _fill_attn_cache(cfg: ModelConfig, kv: dict, max_len: int,
+                     seq_axis: int = 1):
+    """Convert a full-forward kv dict into a decode cache of capacity
+    max_len. ``seq_axis`` is 1 for per-layer caches, 2 when the leaves carry
+    a leading period-stack axis ([n_per, B, S, ...])."""
+    def fill(x):
+        s = x.shape[seq_axis]
+        if cfg.sliding_window and cfg.sliding_window < s:
+            w = cfg.sliding_window
+            idx = [slice(None)] * x.ndim
+            idx[seq_axis] = slice(s - w, s)
+            last = x[tuple(idx)]
+            return jnp.roll(last, s % w, axis=seq_axis)
+        if s < max_len:
+            pad = [(0, 0)] * x.ndim
+            pad[seq_axis] = (0, max_len - s)
+            return jnp.pad(x, pad)
+        return x
+    return jax.tree.map(fill, kv)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            max_len: int = 0, remat: bool = False,
+            sliding_window: Optional[int] = None):
+    """Run the full prompt; return (last-token logits, decode state)."""
+    x, _, _ = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    max_len = max_len or s
+    h, _, caches = forward(params, cfg, x, want_cache=True, remat=remat,
+                           sliding_window=sliding_window)
+    logits = _lm_head(params, cfg, h[:, -1, :])
+
+    def finalize(kind, c, seq_axis):
+        if kind == "attn":
+            return _fill_attn_cache(cfg, c, max_len, seq_axis)
+        return c  # recurrent states are already final
+
+    state: Params = {}
+    if caches["prefix"]:
+        state["prefix"] = [finalize("attn", c, 1) for c in caches["prefix"]]
+    period = {}
+    for j, kind in enumerate(cfg.pattern):
+        # period-stacked leaves: [n_per, B, S, ...] -> seq axis 2
+        period[f"j{j}"] = finalize(kind, caches["period"][f"j{j}"], 2)
+    state["period"] = period
+    return logits, state
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Params,
+                token: jnp.ndarray, pos: jnp.ndarray):
+    """token: [B] int32; pos: scalar int32. Returns (logits [B,V], state)."""
+    x_t = params["embed"][token]
+    new_prefix = []
+    for blk, cache in zip(params.get("prefix", []), state.get("prefix", [])):
+        x_t, cache = _block_decode(blk, cfg, "attn", x_t, pos, cache)
+        new_prefix.append(cache)
+
+    pat = cfg.pattern
+
+    def body(x_t, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for j, kind in enumerate(pat):
+            x_t, c = _block_decode(period_params[f"j{j}"], cfg, kind, x_t, pos,
+                                   period_cache[f"j{j}"])
+            new_cache[f"j{j}"] = c
+        return x_t, new_cache
+
+    x_t, new_period = jax.lax.scan(body, x_t, (params["period"], state["period"]))
+    x_t = layers.rms_norm(params["final_norm"], x_t, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x_t)
+    out_state: Params = {"period": new_period}
+    if new_prefix:
+        out_state["prefix"] = new_prefix
+    return logits, out_state

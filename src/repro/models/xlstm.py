@@ -1,0 +1,328 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), with stabilized exponential gating, full-sequence scan + decode step.
+
+mLSTM state: {"C": [B,H,hd,hd], "n": [B,H,hd], "m": [B,H]}
+sLSTM state: {"c": [B,H,hd], "n": [B,H,hd], "m": [B,H,hd], "h": [B,H,hd]}
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.models import layers
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm or XLSTMConfig()
+    d_in = int(x.proj_factor * cfg.d_model)
+    hd = d_in // cfg.n_heads
+    return x, d_in, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    x, d_in, hd = _dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": layers.dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "conv": layers.causal_conv_init(ks[1], d_in, x.conv_width, dtype),
+        "w_q": layers.dense_init(ks[2], d_in, d_in, dtype),
+        "w_k": layers.dense_init(ks[3], d_in, d_in, dtype),
+        "w_v": layers.dense_init(ks[4], d_in, d_in, dtype),
+        "w_i": layers.dense_init(ks[5], d_in, cfg.n_heads, dtype),
+        "w_f": layers.dense_init(ks[6], d_in, cfg.n_heads, dtype),
+        "f_bias": jnp.full((cfg.n_heads,), 3.0, dtype),  # forget-open init
+        "o_norm": layers.rms_norm_init(d_in, dtype),
+        "w_down": layers.dense_init(ks[7], d_in, cfg.d_model, dtype),
+    }
+
+
+def _mlstm_gates_qkv(params, cfg, u):
+    """u: [B,T,d_in] conv+silu'd. Returns per-head q,k,v [B,T,H,hd], i/f pre-acts [B,T,H]."""
+    x, d_in, hd = _dims(cfg)
+    b, t, _ = u.shape
+    q = (u @ params["w_q"]).reshape(b, t, cfg.n_heads, hd)
+    k = (u @ params["w_k"]).reshape(b, t, cfg.n_heads, hd) * hd ** -0.5
+    v = (u @ params["w_v"]).reshape(b, t, cfg.n_heads, hd)
+    i_pre = (u @ params["w_i"]).astype(jnp.float32)
+    f_pre = (u @ params["w_f"]).astype(jnp.float32) + params["f_bias"].astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_step(carry, inp):
+    """Stabilized mLSTM recurrence (one time step)."""
+    C, n, m = carry                     # [B,H,hd,hd], [B,H,hd], [B,H]
+    q_t, k_t, v_t, i_pre, f_pre = inp   # [B,H,hd] x3, [B,H] x2
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)     # [B,H]
+    i_s = jnp.exp(i_pre - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * (
+        v_t[..., :, None] * k_t[..., None, :])
+    n = f_s[..., None] * n + i_s[..., None] * k_t
+    num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h
+
+
+# default chunk for the chunkwise-parallel form; must divide the sequence.
+# REPRO_MLSTM_CHUNK=0 forces the sequential-scan baseline (perf ablations).
+import os as _os
+
+MLSTM_CHUNK = int(_os.environ.get("REPRO_MLSTM_CHUNK", "128"))
+
+
+def _mlstm_sequential(q, k, v, i_pre, f_pre, carry):
+    """Reference: lax.scan over time (one state round-trip per step)."""
+    xs = (q.swapaxes(0, 1).astype(jnp.float32), k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32), i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    carry, hs = jax.lax.scan(_mlstm_step, carry, xs)
+    return carry, hs.swapaxes(0, 1)
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, carry, chunk: int):
+    """Chunkwise-parallel mLSTM (§Perf hillclimb: the sequential scan's
+    [B,H,hd,hd] matrix-memory round-trips HBM every step; here the state
+    crosses HBM once per CHUNK and the intra-chunk part is a masked
+    attention-like batched matmul — identical math, fp-reordered).
+
+    Derivation: unrolling the stabilized recurrence over a chunk with
+    b_t = cumsum(log f), M_t = max(m_in, cummax_s<=t(i_s - b_s)):
+      m_t   = b_t + M_t
+      h_t   = [ sum_s<=t exp(b_t-b_s+i_s-m_t) (q_t.k_s) v_s
+                + exp(b_t+m_in-m_t) q_t.C_in ] / den_t
+      den_t = max(|same weights applied to (q_t.k_s), q_t.n_in|, exp(-m_t))
+    and the carry update is the t=L row applied to (C, n).
+    """
+    b, t, h, hd = q.shape
+    n_chunks = t // chunk
+
+    def resh(x):
+        return x.reshape(b, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = (resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)),
+                  resh(v.astype(jnp.float32)))
+    is_, fs = resh(i_pre), resh(f_pre)   # [n, B, L, H]
+
+    def one_chunk(carry, inp):
+        C_in, n_in, m_in = carry          # [B,H,hd,hd], [B,H,hd], [B,H]
+        qc, kc, vc, ic, fc = inp          # [B,L,H,hd] x3, [B,L,H] x2
+        logf = jax.nn.log_sigmoid(fc)                       # [B,L,H]
+        bcum = jnp.cumsum(logf, axis=1)                     # inclusive
+        rel = ic - bcum                                     # i_s - b_s
+        M = jnp.maximum(m_in[:, None], jax.lax.cummax(rel, axis=1))
+        m = bcum + M                                        # [B,L,H]
+        # intra-chunk decay matrix: D[t,s] = exp(b_t - b_s + i_s - m_t), s<=t
+        dmat = (bcum[:, :, None] - bcum[:, None, :] + ic[:, None, :]
+                - m[:, :, None])                            # [B,L(t),L(s),H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        sw = scores * w
+        intra = jnp.einsum("btsh,bshd->bthd", sw, vc)
+        inter_scale = jnp.exp(bcum + m_in[:, None] - m)     # [B,L,H]
+        # C layout is [B,H,v,k] (v_t k_t^T): contract q with the k axis
+        inter = jnp.einsum("bthk,bhvk->bthv", qc, C_in) * inter_scale[..., None]
+        den_dot = sw.sum(axis=2) + jnp.einsum("bthd,bhd->bth", qc, n_in) * inter_scale
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m))
+        hout = (intra + inter) / den[..., None]             # [B,L,H,hd]
+        # carry update = row t=L
+        b_tot = bcum[:, -1]                                 # [B,H]
+        m_out = m[:, -1]
+        carry_w = jnp.exp(b_tot[:, None] - bcum + ic - m_out[:, None])  # [B,L,H]
+        C_out = (jnp.exp(b_tot + m_in - m_out)[..., None, None] * C_in
+                 + jnp.einsum("blh,blhd,blhe->bhde", carry_w, vc, kc))
+        n_out = (jnp.exp(b_tot + m_in - m_out)[..., None] * n_in
+                 + jnp.einsum("blh,blhd->bhd", carry_w, kc))
+        return (C_out, n_out, m_out), hout
+
+    carry, hs = jax.lax.scan(one_chunk, carry, (qs, ks, vs, is_, fs))
+    return carry, hs.swapaxes(0, 1).reshape(b, t, h, hd)
+
+
+def mlstm_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                  chunk: int | None = None) -> Tuple[jnp.ndarray, dict]:
+    xcfg, d_in, hd = _dims(cfg)
+    b, t, _ = x.shape
+    up = x @ params["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    u = jax.nn.silu(layers.causal_conv_apply(params["conv"], u))
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(params, cfg, u)
+    carry = (
+        jnp.zeros((b, cfg.n_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, cfg.n_heads, hd), jnp.float32),
+        jnp.full((b, cfg.n_heads), -1e30, jnp.float32),
+    )
+    if chunk is None:
+        # largest divisor of t not exceeding MLSTM_CHUNK (train seqs are
+        # S-1 = 4095 = 3^2*5*7*13 -> chunk 117); sequential if degenerate
+        chunk = max((c for c in range(1, min(MLSTM_CHUNK, t) + 1)
+                     if t % c == 0), default=0)
+        if chunk < 16:
+            chunk = 0
+    if chunk and t % chunk == 0 and t > chunk:
+        carry, hs = _mlstm_chunkwise(q, k, v,
+                                     i_pre.astype(jnp.float32),
+                                     f_pre.astype(jnp.float32), carry, chunk)
+    else:
+        carry, hs = _mlstm_sequential(q, k, v, i_pre, f_pre, carry)
+    h = hs.reshape(b, t, d_in).astype(x.dtype)
+    h = layers.rms_norm(params["o_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    u_raw, _ = jnp.split(up, 2, axis=-1)
+    conv_state = jnp.pad(u_raw, ((0, 0), (xcfg.conv_width - 1, 0), (0, 0)))[:, -(xcfg.conv_width - 1):, :]
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2], "conv": conv_state}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    x, d_in, hd = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, x.conv_width - 1, d_in), dtype),
+    }
+
+
+def mlstm_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, state: dict):
+    xcfg, d_in, hd = _dims(cfg)
+    b = x_t.shape[0]
+    up = x_t @ params["w_up"]
+    u_raw, z = jnp.split(up, 2, axis=-1)
+    u_c, conv_state = layers.causal_conv_step(params["conv"], state["conv"], u_raw)
+    u = jax.nn.silu(u_c)[:, None, :]
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(params, cfg, u)
+    carry = (state["C"], state["n"], state["m"])
+    inp = (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+           v[:, 0].astype(jnp.float32), i_pre[:, 0], f_pre[:, 0])
+    (C, n, m), h = _mlstm_step(carry, inp)
+    h = h.reshape(b, d_in).astype(x_t.dtype)
+    h = layers.rms_norm(params["o_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    x, d_in, hd = _dims(cfg)
+    ks = jax.random.split(key, 11)
+    scale = hd ** -0.5
+
+    def rec(k):  # per-head recurrent weights (block diagonal), [H, hd, hd]
+        return (jax.random.normal(k, (cfg.n_heads, hd, hd)) * scale).astype(dtype)
+
+    return {
+        "w_up": layers.dense_init(ks[0], cfg.d_model, d_in, dtype),
+        "conv": layers.causal_conv_init(ks[1], d_in, x.conv_width, dtype),
+        "w_z": layers.dense_init(ks[2], d_in, d_in, dtype),
+        "w_i": layers.dense_init(ks[3], d_in, d_in, dtype),
+        "w_f": layers.dense_init(ks[4], d_in, d_in, dtype),
+        "w_o": layers.dense_init(ks[5], d_in, d_in, dtype),
+        "r_z": rec(ks[6]), "r_i": rec(ks[7]), "r_f": rec(ks[8]), "r_o": rec(ks[9]),
+        "f_bias": jnp.full((d_in,), 3.0, dtype),
+        "o_norm": layers.rms_norm_init(d_in, dtype),
+        "w_down": layers.dense_init(ks[10], d_in, cfg.d_model, dtype),
+    }
+
+
+def _slstm_step(params, cfg, carry, u_t):
+    """u_t: [B, d_in] raw input for one step; carry: (c, n, m, h) fp32.
+    Used by decode; the full-sequence path precomputes the input projections
+    (time-parallel) and scans only the recurrent part (_slstm_step_rec)."""
+    xcfg, d_in, hd = _dims(cfg)
+    b = u_t.shape[0]
+    proj = jnp.stack([u_t @ params["w_z"], u_t @ params["w_i"],
+                      u_t @ params["w_f"], u_t @ params["w_o"]], axis=1)
+    return _slstm_step_rec(params, cfg, carry, proj)
+
+
+def _slstm_step_rec(params, cfg, carry, proj_t):
+    """proj_t: [B, 4, d_in] input projections (z,i,f,o order);
+    carry: (c, n, m, h) each [B, H, hd] fp32. Only the recurrent
+    h @ r_* matmuls happen per step (§Perf iteration X2)."""
+    xcfg, d_in, hd = _dims(cfg)
+    c, n, m, h = carry
+    b = proj_t.shape[0]
+    r_all = jnp.stack([params["r_z"], params["r_i"], params["r_f"],
+                       params["r_o"]])                     # [4, H, hd, hd]
+    rec = jnp.einsum("bhk,ghkv->bghv", h.astype(proj_t.dtype), r_all)
+    gates = proj_t.reshape(b, 4, cfg.n_heads, hd).astype(jnp.float32) \
+        + rec.astype(jnp.float32)
+    z = jnp.tanh(gates[:, 0])
+    i_pre = gates[:, 1]
+    f_pre = gates[:, 2] + params["f_bias"].astype(jnp.float32).reshape(1, cfg.n_heads, hd)
+    o = jax.nn.sigmoid(gates[:, 3])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)
+    i_s = jnp.exp(i_pre - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_forward(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    xcfg, d_in, hd = _dims(cfg)
+    b, t, _ = x.shape
+    u = x @ params["w_up"]
+    u = jax.nn.silu(layers.causal_conv_apply(params["conv"], u))
+    carry = (jnp.zeros((b, cfg.n_heads, hd), jnp.float32),
+             jnp.zeros((b, cfg.n_heads, hd), jnp.float32),
+             jnp.full((b, cfg.n_heads, hd), -1e30, jnp.float32),
+             jnp.zeros((b, cfg.n_heads, hd), jnp.float32))
+
+    # NOTE (§Perf iteration X2, REFUTED): hoisting the input projections out
+    # of the scan (xs = precomputed [B,T,4,d_in]) measured WORSE (57.2s ->
+    # 85.8s memory term): the per-trip xs slices + their backward cotangent
+    # stream cost more HBM than re-reading the (model-sharded) weights.
+    # Projections stay in-loop.
+    def step(cr, u_t):
+        return _slstm_step(params, cfg, cr, u_t)
+
+    carry, hs = jax.lax.scan(step, carry, u.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, t, d_in).astype(x.dtype)
+    h = layers.rms_norm(params["o_norm"], h, cfg.norm_eps)
+    out = h @ params["w_down"]
+    u_raw = x @ params["w_up"]
+    conv_state = jnp.pad(u_raw, ((0, 0), (xcfg.conv_width - 1, 0), (0, 0)))[:, -(xcfg.conv_width - 1):, :]
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3],
+                 "conv": conv_state}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    x, d_in, hd = _dims(cfg)
+    z3 = lambda: jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)
+    return {
+        "c": z3(), "n": z3(),
+        "m": jnp.full((batch, cfg.n_heads, hd), -1e30, jnp.float32),
+        "h": z3(),
+        "conv": jnp.zeros((batch, x.conv_width - 1, d_in), dtype),
+    }
+
+
+def slstm_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, state: dict):
+    xcfg, d_in, hd = _dims(cfg)
+    u_raw = x_t @ params["w_up"]
+    u_c, conv_state = layers.causal_conv_step(params["conv"], state["conv"], u_raw)
+    u = jax.nn.silu(u_c)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, h = _slstm_step(params, cfg, carry, u)
+    b = x_t.shape[0]
+    h = h.reshape(b, d_in).astype(x_t.dtype)
+    h = layers.rms_norm(params["o_norm"], h, cfg.norm_eps)
+    out = h @ params["w_down"]
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3],
+                 "conv": conv_state}

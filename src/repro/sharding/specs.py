@@ -1,0 +1,247 @@
+"""PartitionSpec rules for every parameter / batch / decode-state tensor.
+
+Layouts (DESIGN.md §3):
+  L1 "client-sharded"   — the faithful BLADE-FL mapping: the client axis C is
+      sharded over 'data' (x 'pod'); aggregation IS the all-reduce over the
+      client axis. Used when C == data-axis extent (small/mid archs).
+  L2 "client-replicated + FSDP" — for giant models C is small and replicated;
+      parameters are additionally sharded over 'data' (FSDP) so N model
+      replicas fit; the per-client local batch is data-parallel inside each
+      client. Aggregation is then shard-local math and the per-iteration
+      grad all-reduce over 'data' carries the communication cost.
+
+Rules are name+kind-based over the param pytree paths produced by
+models.transformer.init_lm; anything unmatched is replicated (safe default —
+XLA propagates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Static description of how one run is laid out on the mesh."""
+    n_clients: int
+    client_axes: Tuple[str, ...]        # () => client axis replicated (L2)
+    batch_axes: Tuple[str, ...]         # per-client batch / serve batch axes
+    model_axes: Tuple[str, ...] = ("model",)
+    fsdp_axes: Tuple[str, ...] = ()     # () => no FSDP
+    seq_axes: Tuple[str, ...] = ()      # decode-cache sequence sharding
+
+
+def _extent(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(dim: int, mesh: Mesh, axes: Tuple[str, ...]):
+    """axes if dim divisible by their extent (and axes non-empty) else None."""
+    if not axes:
+        return None
+    return axes if dim % _extent(mesh, axes) == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _kind_of_path(cfg: ModelConfig, path: str) -> str:
+    m = re.search(r"period/j(\d+)", path)
+    if m:
+        return cfg.pattern[int(m.group(1))]
+    return "attn"  # prefix blocks are attention
+
+
+def _param_spec(cfg: ModelConfig, mesh: Mesh, plan: ShardingPlan, path: str,
+                shape: Tuple[int, ...]) -> P:
+    """Spec for one leaf EXCLUDING client/period leading axes (handled by
+    caller); ``shape`` here is the per-layer logical shape."""
+    mdl, fsdp = plan.model_axes, plan.fsdp_axes
+    name = path.split("/")[-1]
+    kind = _kind_of_path(cfg, path)
+    nd = len(shape)
+
+    def spec(*entries):
+        return P(*(entries + (None,) * (nd - len(entries))))
+
+    if name == "embed":
+        return spec(_div(shape[0], mesh, mdl), _div(shape[1], mesh, fsdp))
+    if name == "lm_head":
+        return spec(_div(shape[0], mesh, fsdp), _div(shape[1], mesh, mdl))
+    if name in ("w_q", "w_uq", "w_up"):
+        return spec(_div(shape[0], mesh, fsdp), _div(shape[1], mesh, mdl))
+    if name in ("w_k", "w_v") and kind == "attn":
+        return spec(_div(shape[0], mesh, fsdp), _div(shape[1], mesh, mdl))
+    if name == "w_o" and kind == "attn":
+        return spec(_div(shape[0], mesh, mdl), _div(shape[1], mesh, fsdp))
+    if name in ("w_dkv", "w_dq"):
+        return spec(_div(shape[0], mesh, fsdp), None)
+    if name in ("w_uk", "w_uv"):
+        return spec(None, _div(shape[1], mesh, mdl))
+    if name in ("w_in", "w_gate"):
+        if nd == 3:  # MoE experts [E, D, F]: expert-parallel + FSDP on F
+            return spec(_div(shape[0], mesh, mdl), None, _div(shape[2], mesh, fsdp))
+        return spec(_div(shape[0], mesh, fsdp), _div(shape[1], mesh, mdl))
+    if name == "w_out":
+        if nd == 3:  # [E, F, D]: shard the OUTPUT dim, not the contraction —
+            # contracting a 'data'-sharded F makes XLA all-reduce the big
+            # [E, C, D] partials every expert matmul (§Perf iteration K2:
+            # 587MB AR -> 168MB all-gather of the f-sharded activations).
+            return spec(_div(shape[0], mesh, mdl), None, _div(shape[2], mesh, fsdp))
+        return spec(_div(shape[0], mesh, mdl), _div(shape[1], mesh, fsdp))
+    if name == "router":
+        return spec(None, None)
+    # --- SSM ---
+    if name == "w_x":
+        return spec(_div(shape[0], mesh, mdl), None)
+    if name == "w_dt":
+        return spec(None, _div(shape[1], mesh, mdl))
+    if name == "a_log":
+        return spec(_div(shape[0], mesh, mdl), None)
+    if name in ("d_skip", "dt_bias"):
+        return spec(_div(shape[0], mesh, mdl))
+    # --- xLSTM (square projections inside the up-projected space) ---
+    if name in ("w_z", "w_i", "w_f", "w_o", "w_k", "w_v"):  # non-attn kinds
+        return spec(None, _div(shape[1], mesh, mdl))
+    if name in ("r_z", "r_i", "r_f", "r_o"):
+        return spec(_div(shape[0], mesh, mdl), None, None)
+    if name == "w_down":
+        return spec(_div(shape[0], mesh, mdl), _div(shape[1], mesh, fsdp))
+    if name == "f_bias":
+        return spec(_div(shape[0], mesh, mdl))
+    if name == "w" and "conv" in path:  # depthwise conv [W, C]
+        return spec(None, _div(shape[1], mesh, mdl))
+    if name == "b" and "conv" in path:
+        return spec(_div(shape[0], mesh, mdl))
+    if name == "scale" and path.endswith("o_norm/scale"):
+        return spec(_div(shape[0], mesh, mdl))
+    # norms, biases, mask_emb, pos_conv, everything else: replicated
+    return P(*([None] * nd))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, plan: ShardingPlan,
+                 params_tree: Any) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (abstract or concrete).
+
+    Handles the structural leading axes: client axis (plan), period-stack
+    axis (paths under period/), both prepended to the per-layer spec.
+    """
+    client_spec = plan.client_axes if plan.client_axes else None
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        lead = []
+        if plan.n_clients > 1:
+            lead.append(client_spec)
+            shape = shape[1:]
+        if "period/" in pstr:
+            lead.append(None)       # period-stack axis
+            shape = shape[1:]
+        inner = _param_spec(cfg, mesh, plan, pstr, shape)
+        return P(*(tuple(lead) + tuple(inner)))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / decode-state specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_pspecs(cfg: ModelConfig, plan: ShardingPlan, batch_tree: Any):
+    """[C, m, ...] or [B, ...]: client axis per plan, batch dim per plan."""
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if plan.n_clients > 1:
+            lead = (plan.client_axes if plan.client_axes else None,
+                    plan.batch_axes if plan.batch_axes else None)
+        else:
+            lead = (plan.batch_axes if plan.batch_axes else None,)
+        return P(*(lead + (None,) * (nd - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def serve_batch_pspecs(plan: ShardingPlan, batch_tree: Any):
+    def one(leaf):
+        nd = len(leaf.shape)
+        return P(*((plan.batch_axes if plan.batch_axes else None,)
+                   + (None,) * (nd - 1)))
+    return jax.tree.map(one, batch_tree)
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, plan: ShardingPlan,
+                        state_tree: Any):
+    """Decode caches: [n_per?, B, S, ...] for attention KV; recurrent states
+    [n_per?, B, ...]. Sequence axis sharded per plan.seq_axes (sequence-
+    parallel decode; softmax partial reductions lower to all-reduces)."""
+    batch = plan.batch_axes if plan.batch_axes else None
+    seq = plan.seq_axes if plan.seq_axes else None
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        lead: list = []
+        if "period/" in pstr:
+            lead = [None]
+            shape = shape[1:]
+        name = pstr.split("/")[-1]
+        if name in ("k", "v"):          # [B, S, Hkv, hd]
+            inner = (batch, _seq_ok(seq, shape[1], mesh), None, None)
+        elif name in ("ckv", "k_rope"):  # [B, S, d]
+            inner = (batch, _seq_ok(seq, shape[1], mesh), None)
+        elif name == "conv":            # [B, W-1, d_in]
+            inner = (batch, None, _div(shape[2], mesh, plan.model_axes))
+        elif name == "h" and len(shape) == 3:   # ssm [B, d_in, ds]
+            inner = (batch, _div(shape[1], mesh, plan.model_axes), None)
+        elif name == "C":               # mlstm [B, H, hd, hd]
+            inner = (batch, _div(shape[1], mesh, plan.model_axes), None, None)
+        elif name in ("n", "m", "c", "h"):
+            hdiv = _div(shape[1], mesh, plan.model_axes) if len(shape) > 1 else None
+            inner = (batch,) + ((hdiv,) + (None,) * (len(shape) - 2) if len(shape) > 1 else ())
+        else:
+            inner = (batch,) + (None,) * (len(shape) - 1)
+        return P(*(tuple(lead) + tuple(inner)))
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def _seq_ok(seq, dim, mesh):
+    if seq is None:
+        return None
+    return seq if dim % _extent(mesh, seq) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding helpers
+# ---------------------------------------------------------------------------
+
+
+def to_shardings(mesh: Mesh, pspec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,1 @@
+from repro.training import checkpoint, metrics, optim, train_state  # noqa: F401

@@ -1,0 +1,72 @@
+"""Checkpointing without external deps: pytrees <-> .npz + structure file.
+
+Handles arbitrary nested dict/list/tuple/NamedTuple-free pytrees of arrays
+(our params/state are plain dicts+lists). Keys are flattened jax.tree paths.
+Includes the BLADE-FL ledger (JSON) so a restart resumes the hash chain.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import chain as chain_lib
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(directory: str, tree: Any, step: int = 0,
+         ledger: Optional[chain_lib.Ledger] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    meta = {"step": step, "treedef": str(treedef), "keys": list(arrays)}
+    if ledger is not None:
+        meta["ledger"] = [vars(b) for b in ledger.blocks]
+        meta["difficulty_bits"] = ledger.difficulty_bits
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None
+            ) -> Tuple[Any, int, Optional[chain_lib.Ledger]]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    ckpts = sorted(f for f in os.listdir(directory) if f.endswith(".npz"))
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    name = f"ckpt_{step:08d}.npz" if step is not None else ckpts[-1]
+    data = np.load(os.path.join(directory, name))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, tmpl in flat:
+        arr = data[_path_str(p)]
+        assert arr.shape == tmpl.shape, (p, arr.shape, tmpl.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    meta_path = os.path.join(directory, name.replace(".npz", ".json"))
+    got_step, ledger = 0, None
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+        got_step = meta.get("step", 0)
+        if "ledger" in meta:
+            ledger = chain_lib.Ledger(meta.get("difficulty_bits", 0))
+            for b in meta["ledger"]:
+                ledger.append(chain_lib.Block(**b))
+    return tree, got_step, ledger

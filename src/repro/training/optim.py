@@ -1,0 +1,115 @@
+"""Optimizers and LR schedules, implemented in plain JAX (no optax):
+SGD (+momentum), Adam/AdamW, and the MiniCPM WSD (warmup-stable-decay)
+schedule [arXiv:2404.06395] used by minicpm-2b's train recipe.
+
+Each optimizer is an (init, update) pair over arbitrary pytrees so it can
+run per-client under vmap (BLADE-FL local training) or globally (the
+centralized baseline the paper compares against).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        if momentum == 0.0:
+            new = jax.tree.map(lambda w, g: w - eta * g.astype(w.dtype), params, grads)
+            return new, state
+        state = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state, grads)
+        new = jax.tree.map(lambda w, m: w - eta * m.astype(w.dtype), params, state)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        eta = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+
+        def step_fn(w, m_, v_):
+            upd = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - eta * upd).astype(w.dtype)
+
+        new = jax.tree.map(step_fn, params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, floor: float = 0.1):
+    """MiniCPM warmup-stable-decay: linear warmup -> constant -> exp decay."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        in_decay = step > (warmup_steps + stable_steps)
+        t = jnp.maximum(step - warmup_steps - stable_steps, 0.0)
+        decay = peak_lr * jnp.maximum(
+            floor, jnp.exp(-t / max(decay_steps, 1) * 2.3026))  # 10x down over decay_steps
+        return jnp.where(step < warmup_steps, warm,
+                         jnp.where(in_decay, decay, peak_lr))
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def recipe_for(arch_name: str, peak_lr: float = 3e-4, total_steps: int = 1000):
+    """Arch-specific default recipe (minicpm gets WSD per its paper)."""
+    if arch_name.startswith("minicpm"):
+        return adamw(wsd_schedule(peak_lr, total_steps // 10, int(total_steps * 0.7),
+                                  total_steps // 5))
+    return adamw(cosine_schedule(peak_lr, total_steps // 10, total_steps))

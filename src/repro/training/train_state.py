@@ -1,0 +1,55 @@
+"""TrainState for the centralized / non-FL training path (baseline the paper
+compares against, and the generic fine-tune driver for the assigned archs)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optim import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def create(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.int32(0))
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    microbatches: int = 1):
+    """Standard centralized step: grad of mean loss, optimizer update."""
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if microbatches > 1:
+            def split(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                        + x.shape[1:]), b)
+
+            def body(acc, mb):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params, mb)
+                return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (loss, grads), _ = jax.lax.scan(body, zero, split(batch))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params, state.step)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        out = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return TrainState(params, opt_state, state.step + 1), out
+
+    return step_fn

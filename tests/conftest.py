@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests must see the single real CPU device — never the dry-run's 512
+# placeholders (see launch/dryrun.py which sets XLA_FLAGS itself).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "do not run tests with dry-run XLA_FLAGS"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,64 @@
+"""Decentralized aggregation (Steps 2+5) — pure-jnp path and Pallas kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.kernels.fedavg import fedavg_tree
+
+
+def _params(key, c=6):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (c, 8, 5)),
+            "b": jax.random.normal(k2, (c, 5))}
+
+
+def test_fedavg_is_mean_broadcast():
+    p = _params(jax.random.key(0))
+    out = aggregation.fedavg(p)
+    want = jnp.mean(p["w1"], axis=0)
+    for i in range(p["w1"].shape[0]):
+        assert jnp.allclose(out["w1"][i], want, atol=1e-6)
+
+
+def test_fedavg_weighted():
+    p = _params(jax.random.key(1), c=3)
+    w = jnp.array([1.0, 2.0, 3.0])
+    out = aggregation.fedavg(p, weights=w)
+    want = (p["b"][0] + 2 * p["b"][1] + 3 * p["b"][2]) / 6.0
+    assert jnp.allclose(out["b"][0], want, atol=1e-5)
+
+
+def test_aggregate_once_shape():
+    p = _params(jax.random.key(2))
+    single = aggregation.aggregate_once(p)
+    assert single["w1"].shape == (8, 5)
+
+
+def test_replicate_then_divergence_zero():
+    single = {"w": jnp.ones((4, 4))}
+    rep = aggregation.replicate(single, 5)
+    assert rep["w"].shape == (5, 4, 4)
+    assert float(aggregation.client_divergence(rep)) < 1e-6
+
+
+def test_divergence_positive_when_spread():
+    p = _params(jax.random.key(3))
+    assert float(aggregation.client_divergence(p)) > 0.01
+
+
+def test_kernel_matches_jnp_path():
+    p = _params(jax.random.key(4))
+    ref = aggregation.fedavg(p)
+    out = fedavg_tree(p, use_kernel=True)
+    for k in p:
+        assert jnp.allclose(out[k], ref[k], atol=1e-5), k
+
+
+def test_fedavg_idempotent():
+    p = _params(jax.random.key(5))
+    once = aggregation.fedavg(p)
+    twice = aggregation.fedavg(once)
+    for k in p:
+        assert jnp.allclose(once[k], twice[k], atol=1e-6)

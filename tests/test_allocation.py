@@ -1,0 +1,54 @@
+"""Eq. (3) resource-allocation accounting."""
+import pytest
+
+from repro.core import allocation, bounds
+
+
+def test_tau_floor():
+    # tau = floor((t/K - beta)/alpha)
+    assert allocation.tau_from_budget(100, 5, 1.0, 10.0) == 10
+    assert allocation.tau_from_budget(100, 5, 2.0, 10.0) == 5
+    assert allocation.tau_from_budget(100, 9, 1.0, 10.0) == 1
+    assert allocation.tau_from_budget(100, 10, 1.0, 10.0) == 0
+
+
+def test_plan_accounting():
+    p = allocation.plan(100, 5, 1.0, 10.0)
+    assert p.tau == 10
+    assert p.train_time == 50
+    assert p.mine_time == 50
+    assert p.slack == 0
+    assert p.feasible
+
+
+def test_slack_nonnegative_and_small():
+    for k in range(1, 12):
+        p = allocation.plan(100, k, 1.3, 7.7)
+        if p.tau >= 1:
+            assert p.slack >= -1e-9
+            assert p.slack < k * 1.3 + 1e-9  # floor loses < alpha per round
+
+
+def test_feasible_rounds():
+    ks = allocation.feasible_rounds(100, 1.0, 10.0)
+    assert ks and max(ks) <= 9
+    for k in ks:
+        assert allocation.tau_from_budget(100, k, 1.0, 10.0) >= 1
+
+
+def test_optimal_plan_feasible():
+    p = bounds.BoundParams(eta=0.01, L=10.0, xi=1.0, delta=0.5, alpha=1.0,
+                           beta=10.0, t_sum=100.0)
+    plan = allocation.optimal_plan(p)
+    assert plan.feasible
+
+
+def test_mining_iterations_calibration():
+    assert allocation.mining_iterations(10.0, hash_rate=100.0) == 1000
+    assert allocation.mining_iterations(0.0001) >= 1
+
+
+def test_tradeoff_monotonicity():
+    # eq. 3: larger K -> smaller tau (fundamental tradeoff)
+    taus = [allocation.tau_from_budget(100, k, 1.0, 6.0) for k in range(1, 10)]
+    assert all(a >= b for a, b in zip(taus, taus[1:]))

@@ -1,0 +1,97 @@
+"""Theorems 1-4 + Corollaries 1-5: bound math validated numerically."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import allocation, bounds
+
+
+def make_params(**kw):
+    base = dict(eta=0.01, L=10.0, xi=1.0, delta=0.5, alpha=1.0, beta=10.0,
+                t_sum=100.0, w0_dist=1.0)
+    base.update(kw)
+    return bounds.BoundParams(**base)
+
+
+class TestBound:
+    def test_bound_positive_and_finite_on_feasible_grid(self):
+        p = make_params()
+        ks = allocation.feasible_rounds(p.t_sum, p.alpha, p.beta)
+        assert ks, "no feasible K"
+        vals = [bounds.loss_bound(p, k) for k in ks]
+        assert all(v > 0 for v in vals)
+        assert any(math.isfinite(v) for v in vals)
+
+    def test_convex_in_k(self):
+        # Theorem 2
+        for eta in (0.005, 0.01, 0.05):
+            p = make_params(eta=eta)
+            assert bounds.is_convex_in_k(p)
+
+    def test_interior_minimum_exists(self):
+        p = make_params()
+        ks = allocation.feasible_rounds(p.t_sum, p.alpha, p.beta)
+        vals = [bounds.loss_bound(p, k) for k in ks]
+        finite = [(k, v) for k, v in zip(ks, vals) if math.isfinite(v)]
+        k_best = min(finite, key=lambda kv: kv[1])[0]
+        assert finite[0][0] < k_best or finite[0][1] > min(v for _, v in finite)
+
+
+class TestKStar:
+    def test_closed_form_matches_numeric(self):
+        # Theorem 3 approximation is valid when eta*L*tau << 1
+        p = make_params(eta=0.002, L=5.0, beta=4.0, t_sum=400.0)
+        k_cf = bounds.k_star_closed_form(p)
+        k_num = bounds.k_star_numeric(p)
+        assert abs(k_cf - k_num) <= max(2, 0.35 * k_num)
+
+    def test_corollary1_k_decreases_with_alpha_and_beta(self):
+        base = make_params(eta=0.002, L=5.0, t_sum=400.0, beta=4.0)
+        k0 = bounds.k_star_closed_form(base)
+        assert bounds.k_star_closed_form(make_params(
+            eta=0.002, L=5.0, t_sum=400.0, beta=4.0, alpha=2.0)) < k0
+        assert bounds.k_star_closed_form(make_params(
+            eta=0.002, L=5.0, t_sum=400.0, beta=8.0)) < k0
+
+    def test_corollary4_k_increases_with_eta(self):
+        ks = [bounds.k_star_closed_form(make_params(eta=e, L=5.0))
+              for e in (0.001, 0.01, 0.05)]
+        assert ks[0] < ks[1] < ks[2]
+
+    def test_corollary2_k_increases_with_delta_numeric(self):
+        ks = [bounds.k_star_numeric(make_params(delta=d, eta=0.005))
+              for d in (0.1, 0.5, 2.0)]
+        assert ks[0] <= ks[1] <= ks[2]
+
+
+class TestLazyBound:
+    def test_lazy_bound_weakly_worse(self):
+        # Theorem 4: lazy terms only shrink g -> larger bound
+        p = make_params()
+        for k in (2, 4, 6):
+            g0 = bounds.loss_bound(p, k)
+            g1 = bounds.loss_bound(p, k, M=4, N=20, theta=0.3, sigma2=0.1)
+            assert g1 >= g0
+
+    def test_remark1_plagiarism_dominates_noise(self):
+        # M/N term vs sqrt(M)/N term at equal magnitudes
+        p = make_params()
+        k = 4
+        g_theta = bounds.loss_bound(p, k, M=8, N=20, theta=0.2, sigma2=0.0)
+        g_sigma = bounds.loss_bound(p, k, M=8, N=20, theta=0.0, sigma2=0.2)
+        assert g_theta >= g_sigma
+
+    def test_corollary5_kstar_decreases_with_lazy_and_noise(self):
+        p = make_params(eta=0.005)
+        k_clean = bounds.k_star_numeric(p)
+        k_lazy = bounds.k_star_numeric(p, M=8, N=20, theta=0.5, sigma2=0.0)
+        k_noisy = bounds.k_star_numeric(p, M=8, N=20, theta=0.5, sigma2=0.5)
+        assert k_lazy <= k_clean
+        assert k_noisy <= k_lazy
+
+
+class TestEstimate:
+    def test_estimate_constants_sane(self):
+        c = bounds.estimate_constants([2.0, 1.5, 1.2, 1.0, 0.9])
+        assert c["L"] > 0 and c["xi"] > 0 and c["delta"] > 0

@@ -1,0 +1,62 @@
+"""Ledger / block validation (§2.2, Steps 2-4)."""
+import pytest
+
+from repro.core import chain
+
+
+def build_ledger(n=5, difficulty_bits=0):
+    led = chain.Ledger(difficulty_bits)
+    for i in range(n):
+        led.append(chain.make_block(
+            index=i, prev_hash=led.head_hash, model_digest=1000 + i,
+            winner=i % 3, nonce=42 + i, pow_hash=7 + i))
+    return led
+
+
+def test_chain_validates():
+    led = build_ledger()
+    assert led.validate_chain()
+    assert len(led.blocks) == 5
+
+
+def test_tampered_digest_detected():
+    led = build_ledger()
+    bad = led.tampered_copy(2, model_digest=9999)
+    assert not bad.validate_chain()
+
+
+def test_tampered_winner_detected():
+    led = build_ledger()
+    bad = led.tampered_copy(1, winner=99)
+    assert not bad.validate_chain()
+
+
+def test_reorder_detected():
+    led = build_ledger()
+    bad = chain.Ledger()
+    bad.blocks = [led.blocks[0], led.blocks[2], led.blocks[1], *led.blocks[3:]]
+    assert not bad.validate_chain()
+
+
+def test_difficulty_enforced():
+    led = chain.Ledger(difficulty_bits=16)
+    ok = chain.make_block(0, led.head_hash, 1, 0, 5, pow_hash=0x0000FFFF)
+    led.append(ok)
+    bad = chain.make_block(1, led.head_hash, 1, 0, 5, pow_hash=0xFFFF0000)
+    with pytest.raises(ValueError):
+        led.append(bad)
+
+
+def test_wrong_prev_hash_rejected():
+    led = build_ledger(2)
+    with pytest.raises(ValueError):
+        led.append(chain.make_block(2, prev_hash=123456, model_digest=1,
+                                    winner=0, nonce=0, pow_hash=0))
+
+
+def test_header_hash_deterministic():
+    b1 = chain.make_block(0, 1, 2, 3, 4, 5)
+    b2 = chain.make_block(0, 1, 2, 3, 4, 5)
+    assert b1.header_hash == b2.header_hash
+    b3 = chain.make_block(0, 1, 2, 3, 4, 6)
+    assert b1.header_hash != b3.header_hash

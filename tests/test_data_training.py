@@ -1,0 +1,166 @@
+"""Data pipeline, optimizers, checkpointing, metrics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chain
+from repro.data import synthetic
+from repro.data.pipeline import FLDataSource, LMDataSource
+from repro.configs import ShapeConfig, get_smoke_arch
+from repro.training import checkpoint, metrics, optim, train_state
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_mnist_proxy_shapes_and_range():
+    d = synthetic.mnist_proxy(jax.random.key(0), 256)
+    assert d["x"].shape == (256, 784)
+    assert d["y"].shape == (256,)
+    assert float(d["x"].min()) >= 0 and float(d["x"].max()) <= 1
+    assert int(d["y"].min()) >= 0 and int(d["y"].max()) <= 9
+
+
+def test_dirichlet_partition_noniid():
+    y = np.repeat(np.arange(10), 200)
+    part_iid = synthetic.dirichlet_partition(y, 8, alpha=100.0,
+                                             samples_per_client=100, seed=0)
+    part_skew = synthetic.dirichlet_partition(y, 8, alpha=0.1,
+                                              samples_per_client=100, seed=0)
+
+    def label_entropy(part):
+        ents = []
+        for i in range(part.shape[0]):
+            counts = np.bincount(y[part[i]], minlength=10) / part.shape[1]
+            nz = counts[counts > 0]
+            ents.append(-(nz * np.log(nz)).sum())
+        return np.mean(ents)
+
+    assert label_entropy(part_skew) < label_entropy(part_iid) - 0.3
+
+
+def test_fl_source_eval_same_distribution():
+    src = FLDataSource(jax.random.key(0), 4, 64)
+    # train a client's data and eval data come from the same templates:
+    # a nearest-template classifier fit on train should beat chance on eval
+    xs = np.asarray(src.data["x"]); ys = np.asarray(src.data["y"])
+    cent = np.stack([xs[ys == c].mean(0) for c in range(10)])
+    ev_x = np.asarray(src.eval_data["x"]); ev_y = np.asarray(src.eval_data["y"])
+    pred = np.argmin(((ev_x[:, None] - cent[None]) ** 2).sum(-1), axis=1)
+    assert (pred == ev_y).mean() > 0.3
+
+
+def test_lm_stream_deterministic():
+    a = synthetic.lm_token_stream(jax.random.key(3), 2, 32, 100)
+    b = synthetic.lm_token_stream(jax.random.key(3), 2, 32, 100)
+    assert jnp.array_equal(a, b)
+    assert int(a.max()) < 100
+
+
+def test_lm_datasource_shapes():
+    cfg = get_smoke_arch("paligemma-3b")
+    shape = ShapeConfig("t", 64, 8, "train")
+    src = LMDataSource(cfg, shape, n_clients=4)
+    b = src.round_batch(0)
+    assert b["patches"].shape == (4, 2, cfg.vlm_prefix_len, cfg.d_model)
+    assert b["tokens"].shape == (4, 2, 64 - cfg.vlm_prefix_len)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_converges(opt, steps=200):
+    target = jnp.array([3.0, -2.0])
+    params = {"w": jnp.zeros(2)}
+    state = opt.init(params)
+    for i in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(grads, state, params, jnp.int32(i))
+    return float(jnp.max(jnp.abs(params["w"] - target)))
+
+
+def test_sgd_converges():
+    assert _quadratic_converges(optim.sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_converges(optim.sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quadratic_converges(optim.adamw(0.1)) < 1e-2
+
+
+def test_wsd_schedule_phases():
+    lr = optim.wsd_schedule(1.0, warmup_steps=10, stable_steps=50,
+                            decay_steps=20)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert abs(float(lr(40)) - 1.0) < 1e-6
+    assert float(lr(75)) < 1.0
+    assert float(lr(200)) >= 0.1 - 1e-6  # floor
+
+
+def test_train_step_decreases_loss():
+    key = jax.random.key(0)
+    data = synthetic.mnist_proxy(key, 256)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    step = train_state.make_train_step(mlp_loss, optim.adamw(1e-2))
+    st = train_state.create(params, optim.adamw(1e-2))
+    batch = {"x": data["x"], "y": data["y"]}
+    losses = []
+    for _ in range(20):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatched_train_step_matches():
+    key = jax.random.key(1)
+    data = synthetic.mnist_proxy(key, 64)
+    batch = {"x": data["x"], "y": data["y"]}
+    params = init_mlp(jax.random.fold_in(key, 1))
+    opt = optim.sgd(0.1)
+    s1 = train_state.make_train_step(mlp_loss, opt, microbatches=1)
+    s4 = train_state.make_train_step(mlp_loss, opt, microbatches=4)
+    st1, _ = s1(train_state.create(params, opt), batch)
+    st4, _ = s4(train_state.create(params, opt), batch)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        assert jnp.allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / metrics
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    key = jax.random.key(0)
+    tree = {"a": jax.random.normal(key, (4, 3)),
+            "nested": {"b": jnp.arange(5)},
+            "lst": [jnp.ones(2), jnp.zeros(3)]}
+    led = chain.Ledger()
+    led.append(chain.make_block(0, led.head_hash, 1, 2, 3, 4))
+    checkpoint.save(str(tmp_path), tree, step=7, ledger=led)
+    got, step, led2 = checkpoint.restore(str(tmp_path), tree)
+    assert step == 7
+    assert led2.validate_chain() and len(led2.blocks) == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert jnp.array_equal(a, b)
+
+
+def test_metric_logger(tmp_path):
+    log = metrics.MetricLogger(str(tmp_path), "t")
+    log.log(0, loss=2.0)
+    log.log(1, loss=1.0)
+    assert log.series("loss") == [2.0, 1.0]
+    assert log.best("loss")["step"] == 1
+    assert os.path.exists(tmp_path / "t.jsonl")

@@ -1,0 +1,125 @@
+"""Decode-path correctness: incremental decode == full forward, prefill
+continuation, sliding-window ring buffer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ShapeConfig, arch_ids, get_smoke_arch
+from repro.models import registry, transformer
+
+DECODE_ARCHS = [a for a in arch_ids()
+                if get_smoke_arch(a).has_decode and
+                get_smoke_arch(a).family != "vlm"]
+
+
+def _uncapped(cfg):
+    if cfg.moe is not None:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = _uncapped(get_smoke_arch(arch))
+    s, b = 16, 2
+    key = jax.random.key(1)
+    params = registry.init_model(key, cfg)
+    batch = registry.make_prefill_batch(key, cfg, ShapeConfig("t", s, b, "prefill"))
+    x, _, _ = transformer._embed_inputs(params, cfg, batch)
+    h, _, _ = transformer.forward(params, cfg, x, remat=False)
+    full = transformer._lm_head(params, cfg, h)
+    state = transformer.init_decode_state(cfg, b, s)
+    toks = batch["tokens"]
+    errs = []
+    for t in range(s):
+        logits, state = transformer.decode_step(params, cfg, state,
+                                                toks[:, t], jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(logits - full[:, t, :]))))
+    assert max(errs) < 2e-4, (arch, max(errs))
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "jamba-1.5-large-398b",
+                                  "xlstm-125m", "deepseek-v2-236b"])
+def test_prefill_then_decode_continues(arch):
+    """prefill(s0) + decode steps == full forward over the whole sequence."""
+    cfg = _uncapped(get_smoke_arch(arch))
+    s0, s1, b = 8, 4, 2
+    key = jax.random.key(2)
+    params = registry.init_model(key, cfg)
+    full_batch = registry.make_prefill_batch(
+        key, cfg, ShapeConfig("t", s0 + s1, b, "prefill"))
+    toks = full_batch["tokens"]
+    x, _, _ = transformer._embed_inputs(params, cfg, {"tokens": toks})
+    h, _, _ = transformer.forward(params, cfg, x, remat=False)
+    full = transformer._lm_head(params, cfg, h)
+
+    logits, state = transformer.prefill(params, cfg,
+                                        {"tokens": toks[:, :s0]},
+                                        max_len=s0 + s1)
+    assert float(jnp.max(jnp.abs(logits - full[:, s0 - 1]))) < 2e-4
+    for t in range(s0, s0 + s1):
+        logits, state = transformer.decode_step(params, cfg, state,
+                                                toks[:, t], jnp.int32(t))
+        err = float(jnp.max(jnp.abs(logits - full[:, t])))
+        assert err < 2e-4, (arch, t, err)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    cfg = get_smoke_arch("phi4-mini-3.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    s, b = 24, 2
+    key = jax.random.key(3)
+    params = registry.init_model(key, cfg)
+    batch = registry.make_prefill_batch(key, cfg, ShapeConfig("t", s, b, "prefill"))
+    toks = batch["tokens"]
+    x, _, _ = transformer._embed_inputs(params, cfg, batch)
+    h, _, _ = transformer.forward(params, cfg, x, remat=False)
+    full = transformer._lm_head(params, cfg, h)
+    # ring-buffer cache has capacity == window only
+    state = transformer.init_decode_state(cfg, b, s)
+    k_leaf = state["period"]["j0"]["k"]
+    assert k_leaf.shape[2] == 8  # [n_per, B, W, Hkv, hd]
+    errs = []
+    for t in range(s):
+        logits, state = transformer.decode_step(params, cfg, state,
+                                                toks[:, t], jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(logits - full[:, t]))))
+    assert max(errs) < 2e-4, max(errs)
+
+
+def test_sliding_window_prefill_ring_layout():
+    """prefill with S > window produces a ring cache decode can continue."""
+    cfg = dataclasses.replace(get_smoke_arch("phi4-mini-3.8b"), sliding_window=8)
+    s0, s1, b = 12, 4, 1
+    key = jax.random.key(4)
+    params = registry.init_model(key, cfg)
+    toks = registry.make_prefill_batch(
+        key, cfg, ShapeConfig("t", s0 + s1, b, "prefill"))["tokens"]
+    x, _, _ = transformer._embed_inputs(params, cfg, {"tokens": toks})
+    h, _, _ = transformer.forward(params, cfg, x, remat=False)
+    full = transformer._lm_head(params, cfg, h)
+    logits, state = transformer.prefill(params, cfg, {"tokens": toks[:, :s0]},
+                                        max_len=s0 + s1)
+    assert float(jnp.max(jnp.abs(logits - full[:, s0 - 1]))) < 2e-4
+    for t in range(s0, s0 + s1):
+        logits, state = transformer.decode_step(params, cfg, state,
+                                                toks[:, t], jnp.int32(t))
+        assert float(jnp.max(jnp.abs(logits - full[:, t]))) < 2e-4, t
+
+
+def test_vlm_prefill_decode_runs():
+    cfg = get_smoke_arch("paligemma-3b")
+    b, s = 2, 32
+    key = jax.random.key(5)
+    params = registry.init_model(key, cfg)
+    batch = registry.make_prefill_batch(key, cfg, ShapeConfig("t", s, b, "prefill"))
+    logits, state = transformer.prefill(params, cfg, batch, max_len=s + 4)
+    assert jnp.all(jnp.isfinite(logits))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for t in range(s, s + 4):
+        logits, state = transformer.decode_step(params, cfg, state, tok,
+                                                jnp.int32(t))
+        assert jnp.all(jnp.isfinite(logits))

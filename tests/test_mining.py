@@ -1,0 +1,56 @@
+"""PoW simulation (§2.2/§3.1 Step 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mining
+
+
+def test_mix_hash_deterministic_and_sensitive():
+    h1 = mining.mix_hash(jnp.uint32(1), jnp.uint32(2), jnp.uint32(3))
+    h2 = mining.mix_hash(jnp.uint32(1), jnp.uint32(2), jnp.uint32(3))
+    h3 = mining.mix_hash(jnp.uint32(1), jnp.uint32(2), jnp.uint32(4))
+    assert int(h1) == int(h2)
+    assert int(h1) != int(h3)
+
+
+def test_mix_hash_distribution():
+    nonces = jnp.arange(4096, dtype=jnp.uint32)
+    hs = np.asarray(mining.mix_hash(jnp.uint32(7), jnp.uint32(9), nonces))
+    # roughly uniform over uint32: mean near 2^31, plenty of unique values
+    assert len(np.unique(hs)) > 4000
+    assert 0.4 < hs.mean() / 2**32 < 0.6
+
+
+def test_pow_search_matches_bruteforce():
+    prev, payload = jnp.uint32(123), jnp.uint32(456)
+    n = 3000
+    bh, bn = mining.pow_search(prev, payload, jnp.uint32(0), n, chunk=512)
+    salt = mining._avalanche(jnp.uint32(0) * jnp.uint32(2246822519))
+    nonces = jnp.arange(n, dtype=jnp.uint32)
+    hs = mining.mix_hash(prev, payload ^ salt, nonces)
+    assert int(bh) == int(jnp.min(hs))
+
+
+def test_pow_search_clients_disjoint():
+    prev, payload = jnp.uint32(1), jnp.uint32(2)
+    h0, _ = mining.pow_search(prev, payload, jnp.uint32(0), 256)
+    h1, _ = mining.pow_search(prev, payload, jnp.uint32(1), 256)
+    assert int(h0) != int(h1)  # different salt -> different race
+
+
+def test_winner_argmin():
+    assert int(mining.winner_of(jnp.array([5, 3, 9], jnp.uint32))) == 1
+
+
+def test_difficulty_threshold():
+    assert int(mining.difficulty_threshold(0)) == 0xFFFFFFFF
+    assert int(mining.difficulty_threshold(8)) == 0x00FFFFFF
+
+
+def test_digest_tree_changes_with_params():
+    t1 = {"a": jnp.ones((4, 4)), "b": jnp.zeros((3,))}
+    t2 = {"a": jnp.ones((4, 4)) * 2, "b": jnp.zeros((3,))}
+    d1, d2 = mining.digest_tree(t1), mining.digest_tree(t2)
+    assert int(d1) != int(d2)
+    assert int(d1) == int(mining.digest_tree(t1))

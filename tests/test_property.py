@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, allocation, bounds, chain, lazy, mining
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Resource allocation (eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(t_sum=st.floats(10, 1000), k=st.integers(1, 50),
+       alpha=st.floats(0.1, 10), beta=st.floats(0.1, 20))
+def test_allocation_never_overspends(t_sum, k, alpha, beta):
+    tau = allocation.tau_from_budget(t_sum, k, alpha, beta)
+    assert tau >= 0
+    if tau >= 1:
+        assert k * (tau * alpha + beta) <= t_sum + 1e-6
+
+
+@settings(**SETTINGS)
+@given(t_sum=st.floats(20, 500), alpha=st.floats(0.1, 5), beta=st.floats(0.1, 10))
+def test_tau_monotone_decreasing_in_k(t_sum, alpha, beta):
+    taus = [allocation.tau_from_budget(t_sum, k, alpha, beta)
+            for k in range(1, 20)]
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Bounds (Theorems 1-4)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(eta=st.floats(0.001, 0.05), L=st.floats(1.0, 15.0),
+       delta=st.floats(0.05, 2.0), beta=st.floats(1.0, 20.0))
+def test_lazy_bound_dominates_clean(eta, L, delta, beta):
+    p = bounds.BoundParams(eta=eta, L=L, xi=1.0, delta=delta, alpha=1.0,
+                           beta=beta, t_sum=200.0)
+    for k in (1, 3, 5):
+        if bounds.gamma(p, k) / k < 1:
+            continue
+        assert bounds.loss_bound(p, k, M=5, N=20, theta=0.3, sigma2=0.2) >= \
+            bounds.loss_bound(p, k)
+
+
+@settings(**SETTINGS)
+@given(eta=st.floats(0.001, 0.02), beta=st.floats(1.0, 15.0))
+def test_kstar_closed_form_positive_and_feasible_scale(eta, beta):
+    p = bounds.BoundParams(eta=eta, L=8.0, xi=1.0, delta=0.5, alpha=1.0,
+                           beta=beta, t_sum=300.0)
+    k = bounds.k_star_closed_form(p)
+    assert 0 < k < p.t_sum / beta  # mining alone must fit the budget
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 8), n=st.integers(1, 40), seed=st.integers(0, 10_000),
+       a=st.floats(-3, 3), b=st.floats(-3, 3))
+def test_fedavg_linearity(c, n, seed, a, b):
+    x = jax.random.normal(jax.random.key(seed), (c, n))
+    lhs = aggregation.fedavg({"w": a * x + b})["w"]
+    rhs = a * aggregation.fedavg({"w": x})["w"] + b
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 8), n=st.integers(1, 40), seed=st.integers(0, 10_000))
+def test_fedavg_preserves_mean(c, n, seed):
+    x = jax.random.normal(jax.random.key(seed), (c, n))
+    out = aggregation.fedavg({"w": x})["w"]
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(x.mean(0)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Lazy clients
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 32), data=st.data())
+def test_plagiarism_sources_always_honest(n, data):
+    m = data.draw(st.integers(0, n - 1))
+    src = lazy.plagiarism_sources(n, m)
+    assert all(src[i] >= m for i in range(m))
+    assert all(src[i] == i for i in range(m, n))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 8), seed=st.integers(0, 1000), data=st.data())
+def test_lazy_preserves_honest_clients(n, seed, data):
+    m = data.draw(st.integers(1, n - 1))
+    x = jax.random.normal(jax.random.key(seed), (n, 12))
+    out = lazy.apply_lazy({"w": x}, jax.random.key(seed + 1), n, m, 0.01)["w"]
+    np.testing.assert_array_equal(np.asarray(out[m:]), np.asarray(x[m:]))
+
+
+# ---------------------------------------------------------------------------
+# Mining / chain
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+def test_mix_hash_bit_sensitivity(a, b):
+    h1 = int(mining.mix_hash(jnp.uint32(a), jnp.uint32(b), jnp.uint32(0)))
+    h2 = int(mining.mix_hash(jnp.uint32(a ^ 1), jnp.uint32(b), jnp.uint32(0)))
+    assert h1 != h2
+
+
+@settings(**SETTINGS)
+@given(digests=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=8))
+def test_chain_roundtrip_and_tamper(digests):
+    led = chain.Ledger()
+    for i, d in enumerate(digests):
+        led.append(chain.make_block(i, led.head_hash, d, 0, i, i))
+    assert led.validate_chain()
+    if len(digests) > 1:
+        bad = led.tampered_copy(0, model_digest=digests[0] ^ 0xFFFF)
+        assert not bad.validate_chain()

@@ -1,0 +1,199 @@
+"""Sharding specs + launch plumbing (1-device where possible; an 8-device
+subprocess exercises real multi-device semantics)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, arch_ids, get_arch, get_smoke_arch
+from repro.launch import analysis, hlo_analysis, steps
+from repro.models import registry
+from repro.sharding import plans, specs
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Abstract mesh for spec construction (no real devices needed)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(dict(zip(axes, shape)))
+
+
+@pytest.mark.parametrize("arch", list(arch_ids()))
+def test_param_pspecs_cover_tree_and_divide(arch):
+    cfg = get_arch(arch)
+    mesh = _fake_mesh()
+    plan = plans.train_plan(cfg, INPUT_SHAPES["train_4k"], mesh, False)
+    abs_params = registry.params_specs(cfg, jnp.bfloat16,
+                                       n_clients=plan.n_clients)
+    pspecs = specs.param_pspecs(cfg, mesh, plan, abs_params)
+    flat_p = jax.tree.leaves(abs_params)
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    ext = dict(zip(mesh.axis_names, mesh.axis_sizes)) \
+        if hasattr(mesh, "axis_sizes") else dict(mesh.shape)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= ext[a]
+            assert dim % n == 0, (arch, spec, leaf.shape)
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_plans_batch_divisible(shape_name):
+    mesh = _fake_mesh()
+    shape = INPUT_SHAPES[shape_name]
+    for arch in arch_ids():
+        cfg = get_arch(arch)
+        if shape.kind == "train":
+            plan = plans.train_plan(cfg, shape, mesh, False)
+            assert shape.global_batch % plan.n_clients == 0
+        else:
+            plan = plans.serve_plan(cfg, shape, mesh, False)
+            assert plan.n_clients == 1
+
+
+def test_skip_rules():
+    hubert = get_arch("hubert-xlarge")
+    assert steps.skip_reason(hubert, INPUT_SHAPES["decode_32k"])
+    assert steps.skip_reason(hubert, INPUT_SHAPES["long_500k"])
+    assert steps.skip_reason(hubert, INPUT_SHAPES["train_4k"]) is None
+    qwen = get_arch("qwen3-32b")
+    assert steps.skip_reason(qwen, INPUT_SHAPES["long_500k"]) is None
+    assert steps.resolve_cfg(qwen, INPUT_SHAPES["long_500k"]).sliding_window > 0
+
+
+def test_hlo_analysis_counts_loop_trips():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    d = hlo_analysis.analyze_dict(txt)
+    assert d["flops"] == 7 * 2 * 64 ** 3
+
+
+def test_roofline_terms():
+    r = analysis.roofline(197e12, 819e9, 50e9, chips=256)
+    assert abs(r["compute_s"] - 1.0) < 1e-6
+    assert abs(r["memory_s"] - 1.0) < 1e-6
+    assert abs(r["collective_s"] - 1.0) < 1e-6
+    assert r["chips"] == 256
+
+
+def test_model_flops():
+    assert analysis.model_flops(10, 100, backward=True) == 6000
+    assert analysis.model_flops(10, 100, backward=False) == 2000
+
+
+@pytest.mark.slow
+def test_multidevice_fl_semantics_subprocess():
+    """8 host devices: L1 layout — client-sharded round equals the
+    single-device reference bit-for-bit (aggregation = all-reduce)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np, json
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core import rounds
+        from repro.models.mlp import init_mlp, mlp_loss
+        from repro.data.pipeline import FLDataSource
+
+        C = 8
+        key = jax.random.key(0)
+        src = FLDataSource(key, C, 32)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1,
+                                n_lazy=2, sigma2=0.0, mine_attempts=64)
+        fn = rounds.make_integrated_round(mlp_loss, spec)
+        st = rounds.init_state(params, jax.random.key(2), C)
+        batch = src.round_batch(0)
+
+        # reference: single device
+        ref_state, ref_m = jax.jit(fn)(st, batch)
+
+        # sharded: client axis over 8 devices
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        cl = NamedSharding(mesh, P("data"))
+        rep = NamedSharding(mesh, P())
+        st_sh = rounds.RoundState(
+            params=jax.tree.map(lambda _: cl, st.params),
+            key=rep, round_idx=rep, prev_hash=rep)
+        b_sh = jax.tree.map(lambda _: cl, batch)
+        m_sh = jax.tree.map(lambda _: rep, ref_m)
+        f2 = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, m_sh))
+        out_state, out_m = f2(st, batch)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(ref_state.params),
+                                  jax.tree.leaves(out_state.params)))
+        print(json.dumps({"err": err,
+                          "loss_ref": float(ref_m["local_loss_mean"]),
+                          "loss_sh": float(out_m["local_loss_mean"])}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5, res
+    assert abs(res["loss_ref"] - res["loss_sh"]) < 1e-5
+
+
+@pytest.mark.slow
+def test_multidevice_decode_step_lowers_subprocess():
+    """8 host devices, (data=2, model=4) mesh: build_decode_step's sharding
+    specs bind and the step lowers+compiles for a reduced arch."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import ShapeConfig, get_smoke_arch
+        from repro.launch import steps
+        from repro.sharding.specs import ShardingPlan
+
+        results = {}
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        for arch in ("phi4-mini-3.8b", "jamba-1.5-large-398b",
+                     "deepseek-v2-236b"):
+            cfg = get_smoke_arch(arch)
+            shape = ShapeConfig("t", 64, 4, "decode")
+            plan = ShardingPlan(n_clients=1, client_axes=(),
+                                batch_axes=("data",), seq_axes=("model",))
+            with mesh:
+                step, abs_in, _ = steps.build_decode_step(
+                    cfg, shape, mesh, False, jnp.float32, plan=plan)
+                compiled = step.lower(*abs_in).compile()
+            results[arch] = bool(compiled.as_text())
+        print(json.dumps(results))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(res.values()), res
