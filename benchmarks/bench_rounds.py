@@ -1,0 +1,82 @@
+"""Round-loop throughput: per-round Python driver vs the compiled lax.scan
+engine (core/rounds.run_blade_fl_scan).
+
+The Python loop pays one dispatch per round plus an ``int()``/``float()``
+host sync per metric per round; the scan engine runs all K integrated rounds
+on device and transfers once. Both paths are timed warm (compile excluded),
+so the gap shown is pure per-round dispatch + sync overhead — the quantity
+the ROADMAP's "fast as the hardware allows" target cares about.
+
+At the paper-scale default (C=20, 128 samples) the scan path is ~2x the
+per-round driver on CPU; at toy sizes (C<=4, <=32 samples) XLA:CPU executes
+the per-round program faster than the same body nested in the scan's while
+loop, so don't benchmark below the default scale.
+
+  PYTHONPATH=src python -m benchmarks.bench_rounds [--rounds 32] [--clients 20]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import rounds
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+def _setup(n_clients: int, samples: int, tau: int):
+    key = jax.random.key(0)
+    src = FLDataSource(key, n_clients, samples, seed=0)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=tau, eta=0.05,
+                            n_lazy=2, sigma2=0.01, mine_attempts=256,
+                            difficulty_bits=2)
+    return spec, params, src.static_batch(), jax.random.fold_in(key, 2)
+
+
+def bench(n_rounds: int = 32, n_clients: int = 20, samples: int = 128,
+          tau: int = 4, reps: int = 3) -> dict:
+    spec, params, batch, key = _setup(n_clients, samples, tau)
+
+    def python_loop_jit():
+        # per-round jit dispatch, callable batch keeps it off the scan path
+        return rounds.run_blade_fl(mlp_loss, spec, params, lambda k: batch,
+                                   key, n_rounds)
+
+    def scan():
+        return rounds.run_blade_fl_scan(mlp_loss, spec, params, batch, key,
+                                        n_rounds)
+
+    out = {}
+    for name, fn in (("python_loop_jit", python_loop_jit), ("scan", scan)):
+        fn()  # warm: compile (scan runner is lru-cached across calls)
+        t0 = time.time()
+        for _ in range(reps):
+            state, hist, ledger = fn()
+        wall = (time.time() - t0) / reps
+        rps = n_rounds / wall
+        out[name] = rps
+        common.csv_line(f"rounds_{name}_K{n_rounds}_C{n_clients}",
+                        wall / n_rounds * 1e6,
+                        f"rounds_per_s={rps:.1f}")
+    out["speedup"] = out["scan"] / out["python_loop_jit"]
+    print(f"scan speedup over per-round jit driver: {out['speedup']:.2f}x")
+    return out
+
+
+def run():
+    bench()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=32)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--samples", type=int, default=128)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=3)
+    a = ap.parse_args()
+    bench(a.rounds, a.clients, a.samples, a.tau, a.reps)

@@ -38,8 +38,9 @@ def run_once(*, k: int, t_sum: float = 100.0, alpha: float = 1.0,
         dp_sigma=dp_sigma, mine_attempts=max(int(beta * 16), 8),
         difficulty_bits=2)
     t0 = time.time()
+    # static batch -> compiled scan path (all K rounds in one dispatch)
     state, hist, ledger = rounds.run_blade_fl(
-        mlp_loss, spec, params, src.round_batch, jax.random.fold_in(key, 2), k)
+        mlp_loss, spec, params, src.static_batch(), jax.random.fold_in(key, 2), k)
     wall = time.time() - t0
     final = aggregate_once(state.params)
     eval_loss, m = mlp_loss(final, src.eval_data)

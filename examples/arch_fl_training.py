@@ -48,9 +48,11 @@ def main():
     def loss_fn(p, b):
         return registry.loss_fn(p, cfg, b, remat=False)
 
+    # per-round token streams, stacked [K, C, ...] so the whole horizon runs
+    # inside the compiled scan engine
     state, hist, ledger = rounds.run_blade_fl(
-        loss_fn, spec, params, src.round_batch, jax.random.fold_in(key, 1),
-        args.rounds)
+        loss_fn, spec, params, src.stacked_batches(args.rounds),
+        jax.random.fold_in(key, 1), args.rounds, stacked=True)
     for k, h in enumerate(hist):
         print(f"round {k}: loss={h['global_loss']:.4f} "
               f"divergence={h['divergence']:.3e} miner={int(h['winner'])}")

@@ -13,6 +13,8 @@ from benchmarks import common
 
 
 def main():
+    # common.sweep_k feeds a static batch to run_blade_fl, so every run in
+    # these sweeps executes on the compiled lax.scan multi-round engine.
     print("lazy-ratio sweep (sigma^2 = 0.01, beta = 6)")
     print(f"{'M/N':>5} {'K*':>3} {'train_time':>10} {'loss':>8} {'acc':>6}")
     for frac in (0.0, 0.1, 0.2, 0.3):

@@ -38,8 +38,11 @@ def main():
         mine_attempts=allocation.mining_iterations(blade.beta),
         difficulty_bits=4)
 
+    # static_batch() (full-batch GD reuses one [C, m, ...] batch) routes
+    # run_blade_fl onto the compiled lax.scan engine: all K rounds on device,
+    # one host transfer at the end.
     state, history, ledger = rounds.run_blade_fl(
-        mlp_loss, spec, params, data.round_batch, jax.random.fold_in(key, 2),
+        mlp_loss, spec, params, data.static_batch(), jax.random.fold_in(key, 2),
         blade.K)
 
     for k, h in enumerate(history):

@@ -86,3 +86,27 @@ def make_block(index: int, prev_hash: int, model_digest: int, winner: int,
                  model_digest=int(model_digest) & 0xFFFFFFFF,
                  winner=int(winner), nonce=int(nonce) & 0xFFFFFFFF,
                  pow_hash=int(pow_hash) & 0xFFFFFFFF)
+
+
+def ledger_from_scan(digests, winners, nonces, pow_hashes,
+                     ledger: Optional[Ledger] = None) -> Ledger:
+    """Rebuild the host-side ledger from stacked scan outputs.
+
+    The compiled multi-round engine (core/rounds.run_blade_fl_scan) keeps all
+    K rounds on device and returns the block-header fields as length-K arrays
+    in a single host transfer. This replays them through ``Ledger.append``,
+    which re-validates every hash link (and the PoW target when the ledger
+    enforces one) — so the scan path produces the exact chain the per-round
+    Python driver would have built.
+    """
+    ledger = ledger if ledger is not None else Ledger()
+    start = len(ledger.blocks)
+    for i in range(len(digests)):
+        block = make_block(
+            index=start + i, prev_hash=ledger.head_hash,
+            model_digest=int(digests[i]), winner=int(winners[i]),
+            nonce=int(nonces[i]), pow_hash=int(pow_hashes[i]))
+        ledger.append(block)
+    if not ledger.validate_chain():
+        raise ValueError("scan-reconstructed ledger failed chain validation")
+    return ledger

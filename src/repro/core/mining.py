@@ -70,7 +70,9 @@ def pow_search(prev_hash: jnp.ndarray, payload: jnp.ndarray, client_id: jnp.ndar
 
     Each client salts its nonce space with its id (disjoint search — the
     blockchain race). Runs in fixed-size chunks via fori_loop so the HLO and
-    memory stay O(chunk) regardless of the calibrated mining budget.
+    memory stay O(chunk) regardless of the calibrated mining budget. When
+    ``n_attempts % chunk != 0`` the tail chunk is masked so exactly
+    ``n_attempts`` nonces are charged against the eq.-1 computing budget.
     """
     n_attempts = int(n_attempts)
     chunk = min(chunk, n_attempts)
@@ -80,8 +82,11 @@ def pow_search(prev_hash: jnp.ndarray, payload: jnp.ndarray, client_id: jnp.ndar
 
     def body(i, best):
         best_h, best_n = best
-        nonces = base + jnp.uint32(i) * jnp.uint32(chunk) + jnp.arange(chunk, dtype=jnp.uint32)
+        attempt_idx = jnp.uint32(i) * jnp.uint32(chunk) + jnp.arange(chunk, dtype=jnp.uint32)
+        nonces = base + attempt_idx
         hs = mix_hash(prev_hash, payload ^ salt, nonces)
+        hs = jnp.where(attempt_idx < jnp.uint32(n_attempts), hs,
+                       jnp.uint32(0xFFFFFFFF))
         idx = jnp.argmin(hs)
         h, n = hs[idx], nonces[idx]
         take = h < best_h

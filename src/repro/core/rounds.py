@@ -14,6 +14,28 @@ one all-reduce, plagiarism is a collective-permute, and the PoW race is an
 argmin over the client axis. The same engine drives the paper-scale MLP
 simulation (C=20 on one CPU device) and the 10 assigned architectures on the
 512-chip dry-run mesh.
+
+Two multi-round driver paths share the single-round engine:
+
+  * ``run_blade_fl_scan`` — the compiled path. All K integrated rounds run
+    inside one ``jax.jit(lax.scan)``; the ``RoundState`` carry (params, PRNG
+    key, round counter, prev-hash) never leaves the device (donated on
+    accelerator backends), per-round metrics and block-header fields come
+    back stacked ``[K]``, and the host sees exactly one end-of-run transfer.
+    ``chain.ledger_from_scan`` then replays the stacked headers through the
+    validating ledger, so Steps 2-5 blockchain semantics are preserved
+    bit-for-bit against the Python loop. Requires the batch to be a static
+    pytree — either one ``[C, ...]`` batch reused every round (the paper's
+    full-batch GD) or a ``[K, C, ...]`` stack (``stacked=True``, built by
+    ``data/pipeline.py`` sources).
+  * the Python loop inside ``run_blade_fl`` — one jitted round per
+    iteration, a host sync per metric per round. Kept for arbitrary
+    per-round batch *callables* (data that cannot be materialized up front)
+    and for ``jit=False`` debugging.
+
+``run_blade_fl`` is the single entry point: it dispatches to the scan engine
+whenever the batch argument is a static pytree and falls back to the Python
+loop for callables. Both paths return the same ``(state, history, ledger)``.
 """
 from __future__ import annotations
 
@@ -182,22 +204,108 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
     return round_fn
 
 
+# How many times each compiled multi-round runner was (re)traced. The
+# equivalence test asserts this stays flat in K — the whole point of the
+# scan engine is ONE trace for the full horizon, not one per round.
+TRACE_COUNTS: Dict[str, int] = {"scan_runner": 0}
+
+# Jitted runners cached on (loss_fn identity, static config). A weakref
+# scheme cannot work here — the cached runner's closure chain pins loss_fn,
+# so a weak key would never die. A small bounded LRU is the honest tradeoff:
+# module-level loss fns (mlp_loss, sweep/benchmark loops at fixed config)
+# get cross-call reuse of the compiled executable, while per-call closures
+# (launch/train arch paths) pin at most maxsize compiled programs before
+# LRU eviction frees them.
+@functools.lru_cache(maxsize=16)
+def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
+                 stacked: bool):
+    """Build (and cache) the jitted K-round runner for this config."""
+    round_fn = make_integrated_round(loss_fn, spec)
+
+    def run(state: RoundState, batch):
+        TRACE_COUNTS["scan_runner"] += 1
+        if stacked:
+            return jax.lax.scan(round_fn, state, batch)
+        return jax.lax.scan(lambda s, _: round_fn(s, batch), state, None,
+                            length=n_rounds)
+
+    # Donate the carry so params never hold two live copies on accelerator
+    # backends; CPU has no donation support and would only warn.
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(run, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=16)
+def _round_runner(loss_fn: LossFn, spec: RoundSpec):
+    """Cached jitted single-round step for the Python-loop path, so repeated
+    ``run_blade_fl`` calls at the same config (K-sweeps, benchmarks) reuse
+    the compiled executable instead of retracing per call."""
+    return jax.jit(make_integrated_round(loss_fn, spec))
+
+
+def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
+                      key, n_rounds: int,
+                      ledger: Optional[chain.Ledger] = None,
+                      stacked: bool = False):
+    """Compiled driver: all K integrated rounds in one ``jax.jit(lax.scan)``.
+
+    ``batch`` is a static pytree: one ``[C, ...]`` batch reused every round,
+    or — with ``stacked=True`` — a ``[K, C, ...]`` stack scanned over as xs.
+    The carry stays on device for the whole horizon; metrics and block-header
+    fields come back stacked and the single end-of-run ``device_get`` is the
+    only host transfer. Returns the same ``(state, history, ledger)`` triple
+    as the Python-loop path, with the ledger rebuilt and re-validated by
+    ``chain.ledger_from_scan``.
+    """
+    if callable(batch):
+        raise TypeError(
+            "run_blade_fl_scan needs a static batch pytree; use "
+            "run_blade_fl for per-round batch callables")
+    if stacked:
+        leads = {x.shape[0] for x in jax.tree.leaves(batch)}
+        if leads != {int(n_rounds)}:
+            raise ValueError(
+                f"stacked batch leading dims {sorted(leads)} != "
+                f"n_rounds={int(n_rounds)}; scan takes its length from xs")
+    runner = _scan_runner(loss_fn, spec, int(n_rounds), bool(stacked))
+    state = init_state(params_single, key, spec.n_clients)
+    state, stacked_metrics = runner(state, batch)
+    host = jax.device_get(stacked_metrics)   # the one host transfer
+    history = [{name: float(v[k]) for name, v in host.items()}
+               for k in range(int(n_rounds))]
+    ledger = chain.ledger_from_scan(
+        host["digest"], host["winner"], host["nonce"], host["pow_hash"],
+        ledger=ledger)
+    return state, history, ledger
+
+
 def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
                  key, n_rounds: int, ledger: Optional[chain.Ledger] = None,
-                 jit: bool = True):
-    """Python driver: runs K integrated rounds, appends validated blocks to
-    the ledger, returns (final RoundState, list of per-round metrics)."""
-    round_fn = make_integrated_round(loss_fn, spec)
-    if jit:
-        round_fn = jax.jit(round_fn)
+                 jit: bool = True, stacked: bool = False):
+    """Run K integrated rounds; returns (final RoundState, history, ledger).
+
+    Dispatches to the compiled scan engine when ``batches`` is a static
+    pytree (see module docstring); falls back to the per-round Python loop
+    for callables (``batches(k) -> batch``) or ``jit=False``.
+    """
+    if jit and not callable(batches):
+        return run_blade_fl_scan(loss_fn, spec, params_single, batches, key,
+                                 n_rounds, ledger=ledger, stacked=stacked)
+    round_fn = _round_runner(loss_fn, spec) if jit \
+        else make_integrated_round(loss_fn, spec)
     state = init_state(params_single, key, spec.n_clients)
     ledger = ledger if ledger is not None else chain.Ledger()
     history = []
     for k in range(n_rounds):
-        batch = batches(k) if callable(batches) else batches
+        if callable(batches):
+            batch = batches(k)
+        elif stacked:
+            batch = jax.tree.map(lambda x: x[k], batches)
+        else:
+            batch = batches
         state, metrics = round_fn(state, batch)
         block = chain.make_block(
-            index=k, prev_hash=ledger.head_hash,
+            index=len(ledger.blocks), prev_hash=ledger.head_hash,
             model_digest=int(metrics["digest"]), winner=int(metrics["winner"]),
             nonce=int(metrics["nonce"]), pow_hash=int(metrics["pow_hash"]))
         ledger.append(block)

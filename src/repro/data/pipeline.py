@@ -39,6 +39,13 @@ class FLDataSource:
         # full local batch every round (paper does full-batch GD locally)
         return self.client_data
 
+    def static_batch(self) -> Dict[str, jnp.ndarray]:
+        """The [C, m, ...] batch every round reuses — feed this straight to
+        ``run_blade_fl`` / ``run_blade_fl_scan`` to take the compiled
+        multi-round path (no [K, ...] stacking needed: full-batch GD means
+        the scan closes over one constant batch)."""
+        return self.client_data
+
 
 class LMDataSource:
     """Synthetic token streams for the assigned-architecture train runs,
@@ -72,3 +79,12 @@ class LMDataSource:
             }
         toks = synthetic.lm_token_stream(key, c * m, s, cfg.vocab)
         return {"tokens": toks.reshape(c, m, s)}
+
+    def stacked_batches(self, n_rounds: int) -> Dict[str, jnp.ndarray]:
+        """All K round batches stacked on a leading axis: leaves are
+        [K, C, m, ...]. This is the xs tensor the compiled scan driver
+        (core/rounds.run_blade_fl_scan with ``stacked=True``) consumes —
+        per-round streams stay deterministic (same round_batch(k) draws)
+        while the whole horizon runs without host round-trips."""
+        per_round = [self.round_batch(k) for k in range(n_rounds)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_round)

@@ -46,8 +46,9 @@ def run_mlp(args) -> dict:
     params = init_mlp(jax.random.fold_in(key, 1))
     log = MetricLogger(args.out_dir, "blade_mlp")
     t0 = time.time()
+    # static batch -> compiled scan engine (K rounds, one dispatch)
     state, hist, ledger = rounds.run_blade_fl(
-        mlp_loss, spec, params, src.round_batch, jax.random.fold_in(key, 2),
+        mlp_loss, spec, params, src.static_batch(), jax.random.fold_in(key, 2),
         blade.K)
     # final eval on held-out data with the aggregated model
     from repro.core.aggregation import aggregate_once
@@ -80,9 +81,10 @@ def run_arch_smoke(args) -> dict:
         return registry.loss_fn(p, cfg, b, remat=False)
 
     t0 = time.time()
+    # stacked [K, C, ...] token streams -> compiled scan engine
     state, hist, ledger = rounds.run_blade_fl(
-        loss_fn, spec, params, src.round_batch, jax.random.fold_in(key, 2),
-        args.rounds)
+        loss_fn, spec, params, src.stacked_batches(args.rounds),
+        jax.random.fold_in(key, 2), args.rounds, stacked=True)
     result = {
         "arch": cfg.name, "rounds": args.rounds,
         "loss_curve": [h["global_loss"] for h in hist],

@@ -1,9 +1,37 @@
 import os
 import sys
 
+import pytest
+
 # Tests must see the single real CPU device — never the dry-run's 512
 # placeholders (see launch/dryrun.py which sets XLA_FLAGS itself).
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "do not run tests with dry-run XLA_FLAGS"
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Abstract mesh for spec construction (no real devices needed).
+
+    Version-compat shim: JAX 0.4.37 wants ``AbstractMesh(shape_tuple)`` with
+    a tuple of ``(name, size)`` pairs; older/newer releases took
+    ``(shape, axes)`` or a dict. Any mesh test should use this one helper
+    instead of growing its own fallback chain.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        pass
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(dict(zip(axes, shape)))
+
+
+@pytest.fixture
+def fake_mesh():
+    """Factory fixture over :func:`make_fake_mesh`."""
+    return make_fake_mesh

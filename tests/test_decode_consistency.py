@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ShapeConfig, arch_ids, get_smoke_arch
 from repro.models import registry, transformer
 
+# every test here compiles a per-arch decode/prefill pair (6-25s each)
+pytestmark = pytest.mark.slow
+
 DECODE_ARCHS = [a for a in arch_ids()
                 if get_smoke_arch(a).has_decode and
                 get_smoke_arch(a).family != "vlm"]

@@ -30,6 +30,7 @@ def test_blade_fl_full_pipeline_with_eval():
     assert hist[-1]["global_loss"] < hist[0]["global_loss"]
 
 
+@pytest.mark.slow  # full FL rounds over compiled reduced archs, ~70s
 @pytest.mark.parametrize("arch", ["xlstm-125m", "deepseek-v2-236b"])
 def test_blade_fl_on_reduced_arch(arch):
     """The paper's technique wrapped around an assigned-architecture family."""

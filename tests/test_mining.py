@@ -32,6 +32,27 @@ def test_pow_search_matches_bruteforce():
     assert int(bh) == int(jnp.min(hs))
 
 
+def test_pow_search_respects_attempt_budget():
+    """Tail chunk must not search past the calibrated budget (eq. 1):
+    n_attempts=1500, chunk=1024 -> the 2nd chunk is masked to 476 live
+    nonces, so the returned nonce stays < offset + 1500."""
+    prev, payload = jnp.uint32(9), jnp.uint32(77)
+    offset = 4096
+    for seed_payload in range(8):
+        bh, bn = mining.pow_search(prev, jnp.uint32(77 + seed_payload),
+                                   jnp.uint32(0), 1500, nonce_offset=offset,
+                                   chunk=1024)
+        assert offset <= int(bn) < offset + 1500, int(bn)
+    # masked search == brute force over exactly n_attempts nonces
+    salt = mining._avalanche(jnp.uint32(0) * jnp.uint32(2246822519))
+    nonces = jnp.uint32(offset) + jnp.arange(1500, dtype=jnp.uint32)
+    hs = mining.mix_hash(prev, payload ^ salt, nonces)
+    bh, bn = mining.pow_search(prev, payload, jnp.uint32(0), 1500,
+                               nonce_offset=offset, chunk=1024)
+    assert int(bh) == int(jnp.min(hs))
+    assert int(bn) == int(nonces[jnp.argmin(hs)])
+
+
 def test_pow_search_clients_disjoint():
     prev, payload = jnp.uint32(1), jnp.uint32(2)
     h0, _ = mining.pow_search(prev, payload, jnp.uint32(0), 256)

@@ -46,6 +46,7 @@ def test_smoke_is_reduced(arch):
         assert cfg.moe.n_experts <= 4
 
 
+@pytest.mark.slow  # value_and_grad compile per arch, ~10-25s each
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch, key):
     """One forward + one GD step: finite loss, grads and updated params."""

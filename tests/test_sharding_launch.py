@@ -17,16 +17,9 @@ from repro.launch import analysis, hlo_analysis, steps
 from repro.models import registry
 from repro.sharding import plans, specs
 
+from conftest import make_fake_mesh as _fake_mesh
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _fake_mesh(shape=(16, 16), axes=("data", "model")):
-    """Abstract mesh for spec construction (no real devices needed)."""
-    from jax.sharding import AbstractMesh
-    try:
-        return AbstractMesh(shape, axes)
-    except TypeError:
-        return AbstractMesh(dict(zip(axes, shape)))
 
 
 @pytest.mark.parametrize("arch", list(arch_ids()))
