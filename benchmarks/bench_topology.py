@@ -1,0 +1,81 @@
+"""Loss-vs-K under different communication topologies (Steps 2+5).
+
+The paper's engine is a full mesh — every broadcast reaches every client and
+all clients adopt the same aggregate. The topology subsystem
+(``repro.core.topology``) generalizes Steps 2+5 to any row-stochastic mixing
+matrix; this sweep shows what that costs: under the same t_sum budget, ring
+gossip and per-round i.i.d. link dropout slow consensus (higher divergence,
+worse held-out loss at the same K) and shift where the loss-vs-K optimum sits —
+the regimes of arXiv:2012.02044 / arXiv:2406.00752 that the monolithic
+full-mesh round could not express.
+
+Every run goes through the compiled ``lax.scan`` engine, and each sweep
+builds its FLDataSource once (hoisted out of the K loop by
+``common.sweep_k``); the per-sweep ``data_build_saved_s`` column records the
+wall time that hoist saves.
+
+  PYTHONPATH=src python -m benchmarks.bench_topology [--samples 128]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.core import topology
+
+
+TOPOLOGIES = (
+    ("full_mesh", topology.FullMesh()),
+    ("ring1", topology.Ring(neighbors=1)),
+    ("p_dropout_0.5", topology.RandomGraph(p_link=0.5)),
+    ("partial_half", None),  # resolved per n_clients in bench()
+)
+
+
+def bench(samples: int = 128, n_clients: int = 20, beta: float = 6.0,
+          seed: int = 0) -> dict:
+    # Rank on eval_loss (held-out data, aggregated model): the train-side
+    # final_loss is each client's loss on its OWN shard, which rewards
+    # non-mixing topologies for overfitting locally and would invert the
+    # comparison.
+    results = {}
+    print(f"{'topology':>14} {'K*':>3} {'eval_loss':>9} {'accuracy':>8} "
+          f"{'divergence':>10} {'build_saved_s':>13}")
+    for name, topo in TOPOLOGIES:
+        if topo is None:
+            topo = topology.PartialParticipation(n_active=max(n_clients // 2, 1))
+        res = common.sweep_k(n_clients=n_clients, samples=samples, beta=beta,
+                             seed=seed, topology=topo)
+        best = common.best_of(res, key="eval_loss")
+        results[name] = {
+            "best_k": best["k"], "eval_loss": best["eval_loss"],
+            "accuracy": best["accuracy"], "final_loss": best["final_loss"],
+            "divergence": best["divergence"],
+            "eval_loss_vs_k": {r["k"]: r["eval_loss"] for r in res},
+            "data_build_saved_s": best["data_build_saved_s"],
+        }
+        print(f"{name:>14} {best['k']:>3} {best['eval_loss']:>9.4f} "
+              f"{best['accuracy']:>8.3f} {best['divergence']:>10.3e} "
+              f"{best['data_build_saved_s']:>13.2f}")
+        common.csv_line(
+            f"topology_{name}_C{n_clients}",
+            best["us_per_round"],
+            f"best_k={best['k']},eval_loss={best['eval_loss']:.4f}")
+    full = results["full_mesh"]["eval_loss"]
+    for name, r in results.items():
+        r["eval_gap_vs_full_mesh"] = r["eval_loss"] - full
+    return results
+
+
+def run():
+    return bench()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--beta", type=float, default=6.0)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    bench(a.samples, a.clients, a.beta, a.seed)

@@ -5,6 +5,7 @@ Time is normalized by alpha, like the paper: t_sum=100, beta default 10.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -13,30 +14,68 @@ import jax.numpy as jnp
 
 from repro.core import allocation, bounds, rounds
 from repro.core.aggregation import aggregate_once
+from repro.core.topology import FullMesh, Topology
 from repro.data.pipeline import FLDataSource
 from repro.models.mlp import init_mlp, mlp_loss
 
+# Single source of truth for the dataset-shaping defaults, shared by
+# build_source / run_once / sweep_k so a prebuilt src can never silently
+# drift from what run_once would have built itself.
+DATA_DEFAULTS = dict(n_clients=20, samples=256, dataset="mnist", seed=0,
+                     dirichlet_alpha=0.2)
+
+
+def build_source(**kw) -> FLDataSource:
+    """The FLDataSource `run_once` derives from the same kwargs — exposed so
+    sweeps build it once and reuse it across every K (the build is a pure
+    function of these arguments, so hoisting is result-identical). Accepts
+    the DATA_DEFAULTS keys."""
+    cfg = {**DATA_DEFAULTS, **kw}
+    return FLDataSource(jax.random.key(cfg["seed"]), cfg["n_clients"],
+                        cfg["samples"], cfg["dirichlet_alpha"],
+                        dataset=cfg["dataset"], seed=cfg["seed"])
+
+
+def _last_finite(curve: List[float]) -> float:
+    """Last finite entry of a possibly NaN-masked (eval_every > 1) curve."""
+    for v in reversed(curve):
+        if math.isfinite(v):
+            return v
+    return float("nan")
+
 
 def run_once(*, k: int, t_sum: float = 100.0, alpha: float = 1.0,
-             beta: float = 10.0, eta: float = 0.05, n_clients: int = 20,
+             beta: float = 10.0, eta: float = 0.05,
+             n_clients: int = DATA_DEFAULTS["n_clients"],
              n_lazy: int = 0, sigma2: float = 0.0, dp_sigma: float = 0.0,
-             samples: int = 256, dataset: str = "mnist", seed: int = 0,
-             dirichlet_alpha: float = 0.2) -> Optional[Dict]:
+             samples: int = DATA_DEFAULTS["samples"],
+             dataset: str = DATA_DEFAULTS["dataset"],
+             seed: int = DATA_DEFAULTS["seed"],
+             dirichlet_alpha: float = DATA_DEFAULTS["dirichlet_alpha"],
+             eval_every: int = 1,
+             topology: Optional[Topology] = None,
+             src: Optional[FLDataSource] = None) -> Optional[Dict]:
     """One BLADE-FL run at a given K. Returns None when K is infeasible.
 
     Dir(0.2) heterogeneity: strong enough non-IID that aggregation matters
-    and the loss-vs-K curve has the paper's interior optimum."""
+    and the loss-vs-K curve has the paper's interior optimum. Pass ``src``
+    to reuse a prebuilt FLDataSource (sweeps), ``topology`` to run Steps 2+5
+    over a non-full-mesh mixing matrix, ``eval_every`` to stride the in-scan
+    global-loss eval."""
     tau = allocation.tau_from_budget(t_sum, k, alpha, beta)
     if tau < 1:
         return None
     key = jax.random.key(seed)
-    src = FLDataSource(key, n_clients, samples, dirichlet_alpha,
-                       dataset=dataset, seed=seed)
+    if src is None:
+        src = build_source(n_clients=n_clients, samples=samples,
+                           dataset=dataset, seed=seed,
+                           dirichlet_alpha=dirichlet_alpha)
     params = init_mlp(jax.random.fold_in(key, 1))
     spec = rounds.RoundSpec(
         n_clients=n_clients, tau=tau, eta=eta, n_lazy=n_lazy, sigma2=sigma2,
         dp_sigma=dp_sigma, mine_attempts=max(int(beta * 16), 8),
-        difficulty_bits=2)
+        difficulty_bits=2, eval_every=eval_every,
+        topology=topology if topology is not None else FullMesh())
     t0 = time.time()
     # static batch -> compiled scan path (all K rounds in one dispatch)
     state, hist, ledger = rounds.run_blade_fl(
@@ -47,7 +86,7 @@ def run_once(*, k: int, t_sum: float = 100.0, alpha: float = 1.0,
     return {
         "k": k, "tau": tau,
         "train_time": k * tau * alpha, "mine_time": k * beta,
-        "final_loss": float(hist[-1]["global_loss"]),
+        "final_loss": _last_finite([h["global_loss"] for h in hist]),
         "eval_loss": float(eval_loss), "accuracy": float(m["accuracy"]),
         "loss_curve": [h["global_loss"] for h in hist],
         "divergence": float(hist[-1]["divergence"]),
@@ -64,11 +103,22 @@ def sweep_k(ks=None, **kw) -> List[Dict]:
         kmax = int(t_sum / (alpha + beta))
         ks = sorted(set([1, 2, 3, 4, 5, 6, 8] + [kmax]))
         ks = [k for k in ks if 1 <= k <= kmax]
+    # Build the dataset ONCE for the whole sweep — run_once would otherwise
+    # rebuild the identical FLDataSource per K (same kwargs -> same data).
+    t0 = time.time()
+    src = kw.pop("src", None) or build_source(
+        **{key: kw[key] for key in DATA_DEFAULTS if key in kw})
+    build_s = time.time() - t0
     out = []
     for k in ks:
-        r = run_once(k=k, **kw)
+        r = run_once(k=k, src=src, **kw)
         if r is not None:
             out.append(r)
+    # one build amortized over the sweep; saved_s counts only the rebuilds
+    # actually avoided (infeasible Ks never built a source pre-hoist)
+    for r in out:
+        r["data_build_s"] = build_s
+        r["data_build_saved_s"] = build_s * max(len(out) - 1, 0)
     return out
 
 
@@ -86,9 +136,9 @@ def fit_bound_params(results: List[Dict], *, eta: float, alpha: float,
     LINEAR in w0_dist (g scales as 1/w0), so the tightest dominating scale
     is w0 = max_k empirical(k) / bound_{w0=1}(k).
     """
-    import math
-
     curve = results[0]["loss_curve"] if results else [1.0]
+    # eval_every > 1 NaN-masks skipped rounds; calibrate on the evaluated ones
+    curve = [v for v in curve if math.isfinite(v)] or [1.0]
     c = bounds.estimate_constants(curve)
     p1 = bounds.BoundParams(eta=eta, L=min(c["L"], 0.5 / eta), xi=c["xi"],
                             delta=c["delta"], alpha=alpha, beta=beta,

@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.configs import ShapeConfig, get_smoke_arch
-from repro.core import rounds
+from repro.core import rounds, topology
 from repro.data.pipeline import LMDataSource
 from repro.models import registry
 
@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--tau", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lazy", type=int, default=1)
+    ap.add_argument("--topology", default="full",
+                    help="full | ring[:k] | random[:p] | partial:n")
+    ap.add_argument("--eval-every", type=int, default=1)
     args = ap.parse_args()
 
     cfg = get_smoke_arch(args.arch)
@@ -43,7 +46,9 @@ def main():
 
     spec = rounds.RoundSpec(n_clients=args.clients, tau=args.tau, eta=5e-3,
                             n_lazy=args.lazy, sigma2=1e-4,
-                            mine_attempts=512, difficulty_bits=3)
+                            mine_attempts=512, difficulty_bits=3,
+                            eval_every=args.eval_every,
+                            topology=topology.from_name(args.topology))
 
     def loss_fn(p, b):
         return registry.loss_fn(p, cfg, b, remat=False)

@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.configs import BladeConfig
-from repro.core import allocation, rounds
+from repro.core import allocation, rounds, topology
 from repro.core.aggregation import aggregate_once
 from repro.data.pipeline import FLDataSource
 from repro.models.mlp import init_mlp, mlp_loss
@@ -32,11 +32,14 @@ def main():
     data = FLDataSource(key, blade.n_clients, blade.samples_per_client,
                         blade.dirichlet_alpha)
     params = init_mlp(jax.random.fold_in(key, 1))
+    # topology=FullMesh() is the paper's Step 2+5 (broadcast to all, adopt
+    # the aggregate) and the default — see examples/gossip_topologies.py for
+    # ring / link-dropout / partial-participation variants of the same run.
     spec = rounds.RoundSpec(
         n_clients=blade.n_clients, tau=tau, eta=blade.eta,
         n_lazy=blade.n_lazy, sigma2=blade.sigma2,
         mine_attempts=allocation.mining_iterations(blade.beta),
-        difficulty_bits=4)
+        difficulty_bits=4, topology=topology.FullMesh())
 
     # static_batch() (full-batch GD reuses one [C, m, ...] batch) routes
     # run_blade_fl onto the compiled lax.scan engine: all K rounds on device,

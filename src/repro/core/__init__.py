@@ -8,4 +8,5 @@ from repro.core import (  # noqa: F401
     lazy,
     mining,
     rounds,
+    topology,
 )

@@ -34,6 +34,29 @@ def fedavg(params, weights: Optional[jnp.ndarray] = None):
     return jax.tree.map(one, params)
 
 
+def mix(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None):
+    """Generalized Steps 2+5: client i adopts ``sum_j W[i, j] * params_j``.
+
+    ``W [C, C]`` is a row-stochastic mixing matrix from ``core.topology``
+    (full mesh ``11^T/C`` recovers ``fedavg`` up to float association order;
+    the identity matrix is a no-communication round). Optional ``weights``
+    (|D_i| data sizes) reweight each row's contributions —
+    ``W'[i, j] ∝ W[i, j] * weights[j]``, renormalized per row — so the
+    full-mesh W with weights equals weighted ``fedavg``. Accumulation is in
+    float32; each leaf round-trips back to its own dtype.
+    """
+    W = jnp.asarray(W, jnp.float32)
+    if weights is not None:
+        W = W * jnp.asarray(weights, jnp.float32)[None, :]
+        W = W / jnp.sum(W, axis=1, keepdims=True)
+
+    def one(leaf):
+        flat = leaf.astype(jnp.float32).reshape((leaf.shape[0], -1))
+        return (W @ flat).reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
 def aggregate_once(params, weights: Optional[jnp.ndarray] = None):
     """Mean over client axis WITHOUT re-broadcast (single global model)."""
 

@@ -36,6 +36,42 @@ Two multi-round driver paths share the single-round engine:
 ``run_blade_fl`` is the single entry point: it dispatches to the scan engine
 whenever the batch argument is a static pytree and falls back to the Python
 loop for callables. Both paths return the same ``(state, history, ledger)``.
+
+Stage pipeline + topology architecture
+--------------------------------------
+
+The integrated round is composed from five named stage functions, each built
+once per ``RoundSpec`` by its ``make_*`` factory and individually jittable /
+testable:
+
+  ``local_train``   Step 1: tau collective-free GD iterations per client
+  ``perturb``       Step 1 (lazy, eq. 7) + §6 DP noise on the broadcast set
+  ``communicate``   Steps 2+5: header digest, optional plagiarism screening,
+                    divergence diagnostic, then the topology mix
+  ``mine``          Steps 3+4: PoW race over the client axis + hash link
+  ``finalize``      metrics assembly, strided global-loss eval, next carry
+
+``make_integrated_round`` is now just the composition of those stages — add
+a scenario by swapping a stage, not by editing a 70-line closure.
+
+The communication pattern of Steps 2+5 is pluggable via
+``RoundSpec.topology`` (``core/topology.py``): a ``Topology`` yields a
+row-stochastic mixing matrix ``W [C, C]`` per round and the communicate
+stage applies ``aggregation.mix(params, W)``. The default ``FullMesh`` — the
+paper's "broadcast to all, everyone adopts the aggregate" — short-circuits
+to ``aggregation.fedavg`` so the baseline stays bit-for-bit identical to the
+pre-topology engine; ``Ring``, ``RandomGraph`` (per-round i.i.d. link
+dropout) and ``PartialParticipation`` open the partial-connectivity regimes
+of arXiv:2012.02044 / arXiv:2406.00752. Both driver paths derive the
+per-round graph from the same fold of the carried PRNG key, so scan and
+Python loop stay exactly equivalent for every topology.
+
+``RoundSpec.eval_every`` strides the in-scan global-loss eval: rounds where
+``(round_idx + 1) % eval_every != 0`` skip the eval vmap via ``lax.cond``
+and report NaN, so the history keeps a static ``[K]`` layout. The default
+``eval_every=1`` keeps the exact pre-stride computation (no cond in the
+jaxpr). Choose K divisible by ``eval_every`` when you need
+``history[-1]["global_loss"]`` finite.
 """
 from __future__ import annotations
 
@@ -46,7 +82,8 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, chain, dp as dp_lib, lazy as lazy_lib, mining
+from repro.core import (aggregation, chain, detection, dp as dp_lib,
+                        lazy as lazy_lib, mining, topology as topology_lib)
 
 LossFn = Callable[[Any, Any], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
 
@@ -64,6 +101,12 @@ class RoundSpec:
     difficulty_bits: int = 8
     microbatches: int = 1       # grad accumulation inside each local iteration
     eval_global_loss: bool = True
+    # eval stride: compute global_loss only on rounds with
+    # (round_idx + 1) % eval_every == 0 (NaN elsewhere); 1 = every round.
+    eval_every: int = 1
+    # Steps 2+5 communication pattern (core/topology.py). FullMesh is the
+    # paper baseline and dispatches to aggregation.fedavg bit-for-bit.
+    topology: topology_lib.Topology = topology_lib.FullMesh()
     # beyond-paper (§8 future work): flag near-duplicate broadcast models
     # before aggregation (core/detection.py); adds n_suspects to metrics.
     detect_lazy: bool = False
@@ -114,11 +157,17 @@ def _microbatched_grad(loss_fn: LossFn, n_mb: int):
     return grad_fn
 
 
-def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
-    """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
+# fold_in salt deriving the topology key from k_dp — a fresh stream for
+# stochastic topologies that leaves the lazy/DP streams (and therefore the
+# FullMesh baseline results) untouched.
+_TOPOLOGY_SALT = 0x746F706F  # "topo"
 
-    ``batch`` leaves have leading client axis [C, local_batch, ...].
-    """
+
+def make_local_train(loss_fn: LossFn, spec: RoundSpec):
+    """Step 1 stage: ``(params, batch) -> (params, local_losses [C])`` —
+    tau collective-free GD iterations per client. The carried loss is the
+    one observed at the last iteration (free — value_and_grad computes it
+    anyway)."""
     if spec.microbatches > 1:
         grad_fn = _microbatched_grad(loss_fn, spec.microbatches)
     else:
@@ -129,13 +178,7 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
 
     per_client_grad = jax.vmap(grad_fn)
 
-    def round_fn(state: RoundState, batch) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
-        key, k_lazy, k_dp = jax.random.split(state.key, 3)
-        params = state.params
-
-        # Step 1 — local training: tau collective-free GD iterations / client.
-        # The carried loss is the one observed at the last iteration (free —
-        # value_and_grad computes it anyway).
+    def local_train(params, batch):
         def local_iter(_, carry):
             p, _ = carry
             losses, grads = per_client_grad(p, batch)
@@ -144,62 +187,133 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
             return (p, losses)
 
         loss0 = jnp.zeros((spec.n_clients,), jnp.float32)
-        params, local_losses = jax.lax.fori_loop(
-            0, spec.tau, local_iter, (params, loss0))
+        return jax.lax.fori_loop(0, spec.tau, local_iter, (params, loss0))
 
-        # Step 1 (lazy clients) — plagiarize + artificial noise (eq. 7)
+    return local_train
+
+
+def make_perturb(spec: RoundSpec):
+    """Step 1 tail stage: lazy plagiarism + noise (eq. 7), then optional §6
+    DP noise on the models about to be broadcast."""
+
+    def perturb(params, k_lazy, k_dp):
         params = lazy_lib.apply_lazy(params, k_lazy, spec.n_clients,
                                      spec.n_lazy, spec.sigma2)
-        # §6 — optional DP noise on the broadcast models
-        params = dp_lib.privatize(params, k_dp, spec.dp_sigma)
+        return dp_lib.privatize(params, k_dp, spec.dp_sigma)
 
-        # Step 2 — broadcast & verification: header digest of shared models;
-        # optional plagiarism screening on the broadcast set (every client
-        # sees every model, so every client can vote the same flags)
+    return perturb
+
+
+def make_communicate(spec: RoundSpec):
+    """Steps 2+5 stage: ``(params, prev_params, k_topo, round_idx) ->
+    (mixed_params, digest, divergence, extra_metrics)``.
+
+    Header digest and optional plagiarism screening run on the broadcast set
+    (every client sees every *delivered* model; the digest always covers the
+    full broadcast so the hash chain is topology-independent), divergence is
+    the pre-mix client spread (delta diagnostic, Def. 1), then the topology's
+    row-stochastic ``W`` mixes the models. ``FullMesh`` dispatches straight
+    to ``fedavg`` — bit-for-bit the paper baseline."""
+    topo = spec.topology
+
+    def communicate(params, prev_params, k_topo, round_idx):
         digest = mining.digest_tree(params)
+        extra = {}
         if spec.detect_lazy:
-            from repro.core import detection
             suspects, _ = detection.detect_lazy_round(
-                params, state.params, threshold_frac=spec.detect_threshold)
+                params, prev_params, threshold_frac=spec.detect_threshold)
+            extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
+        divergence = aggregation.client_divergence(params)
+        if topo.is_full_mesh:
+            params = aggregation.fedavg(params)
+        else:
+            w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
+            params = aggregation.mix(params, w)
+        return params, digest, divergence, extra
 
-        # Step 3 — mining race over the client axis
+    return communicate
+
+
+def make_mine(spec: RoundSpec):
+    """Steps 3+4 stage: per-client PoW nonce race, winner argmin, and the
+    hash link for the new block header. Returns ``(mine_metrics, new_hash)``."""
+
+    def mine(prev_hash, digest, round_idx):
         client_ids = jnp.arange(spec.n_clients, dtype=jnp.uint32)
         search = jax.vmap(
             lambda cid: mining.pow_search(
-                state.prev_hash, digest, cid, spec.mine_attempts,
-                nonce_offset=state.round_idx.astype(jnp.uint32) * jnp.uint32(1 << 20)))
+                prev_hash, digest, cid, spec.mine_attempts,
+                nonce_offset=round_idx.astype(jnp.uint32) * jnp.uint32(1 << 20)))
         best_h, best_n = search(client_ids)
         winner = mining.winner_of(best_h)
         solved = best_h[winner] <= mining.difficulty_threshold(spec.difficulty_bits)
-
-        # Step 4 — block validation: hash-link the new block header
-        new_hash = mining.mix_hash(state.prev_hash, digest, best_n[winner])
-
-        # client-model spread BEFORE aggregation (diagnostic for delta, Def. 1)
-        divergence = aggregation.client_divergence(params)
-
-        # Step 5 — local updating: every client adopts the aggregate
-        params = aggregation.fedavg(params)
-
+        new_hash = mining.mix_hash(prev_hash, digest, best_n[winner])
         metrics = {
-            "local_loss_mean": jnp.mean(local_losses),
             "winner": winner.astype(jnp.int32),
             "pow_hash": best_h[winner],
             "nonce": best_n[winner],
             "solved": solved,
-            "digest": digest,
-            "divergence": divergence,
         }
-        if spec.detect_lazy:
-            metrics["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-        if spec.eval_global_loss:
-            glosses = jax.vmap(lambda p, b: loss_fn(p, b)[0])(params, batch)
-            metrics["global_loss"] = jnp.mean(glosses)
+        return metrics, new_hash
 
+    return mine
+
+
+def make_finalize(loss_fn: LossFn, spec: RoundSpec):
+    """Closing stage: strided global-loss eval + the next ``RoundState``.
+
+    With ``eval_every == 1`` the eval is unconditional — the exact
+    pre-stride computation. Otherwise a ``lax.cond`` skips the eval vmap on
+    non-eval rounds and reports NaN, keeping the metrics pytree static for
+    ``lax.scan``."""
+
+    def eval_loss(params, batch):
+        glosses = jax.vmap(lambda p, b: loss_fn(p, b)[0])(params, batch)
+        return jnp.mean(glosses)
+
+    def finalize(state, params, key, new_hash, batch, metrics):
+        if spec.eval_global_loss:
+            if spec.eval_every <= 1:
+                metrics["global_loss"] = eval_loss(params, batch)
+            else:
+                is_eval = (state.round_idx + 1) % spec.eval_every == 0
+                metrics["global_loss"] = jax.lax.cond(
+                    is_eval, lambda: eval_loss(params, batch),
+                    lambda: jnp.full((), jnp.nan, jnp.float32))
         new_state = RoundState(params=params, key=key,
                                round_idx=state.round_idx + 1,
                                prev_hash=new_hash)
         return new_state, metrics
+
+    return finalize
+
+
+def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
+    """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
+
+    ``batch`` leaves have leading client axis [C, local_batch, ...]. The
+    round is the composition of the five stage factories above; swap a stage
+    to express a new scenario."""
+    local_train = make_local_train(loss_fn, spec)
+    perturb = make_perturb(spec)
+    communicate = make_communicate(spec)
+    mine = make_mine(spec)
+    finalize = make_finalize(loss_fn, spec)
+
+    def round_fn(state: RoundState, batch) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
+        key, k_lazy, k_dp = jax.random.split(state.key, 3)
+        k_topo = jax.random.fold_in(k_dp, _TOPOLOGY_SALT) \
+            if spec.topology.stochastic else None
+
+        params, local_losses = local_train(state.params, batch)
+        params = perturb(params, k_lazy, k_dp)
+        params, digest, divergence, extra = communicate(
+            params, state.params, k_topo, state.round_idx)
+        mine_metrics, new_hash = mine(state.prev_hash, digest, state.round_idx)
+
+        metrics = {"local_loss_mean": jnp.mean(local_losses), **mine_metrics,
+                   "digest": digest, "divergence": divergence, **extra}
+        return finalize(state, params, key, new_hash, batch, metrics)
 
     return round_fn
 

@@ -1,0 +1,160 @@
+"""Communication topologies for the model-broadcast step (paper §3.1 Step 2).
+
+The paper's BLADE-FL broadcasts every model to every client and every client
+adopts the same aggregate — a full mesh, i.e. the row-stochastic mixing
+matrix ``W = 11^T / C``. Related work (BLADE-FL with lazy clients,
+arXiv:2012.02044; blockchain-aided wireless FL, arXiv:2406.00752) studies
+regimes where that broadcast is partial or lossy: ring gossip over a sparse
+overlay, i.i.d. per-round link dropout on wireless channels, and static
+partial participation. This module expresses all of them as one abstraction:
+
+    a ``Topology`` yields a row-stochastic mixing matrix ``W [C, C]``
+    per round; client i's post-communication model is
+    ``sum_j W[i, j] * model_j`` (``aggregation.mix``).
+
+Every topology is a frozen (hashable) dataclass so it can live inside
+``rounds.RoundSpec`` — which is both an ``lru_cache`` key for the compiled
+runners and part of the closure of the jitted round. Stochastic topologies
+(``RandomGraph``) draw their per-round graph from a PRNG key folded with the
+round index, so the compiled ``lax.scan`` engine and the per-round Python
+loop see identical matrices round for round.
+
+``FullMesh`` is the paper baseline: ``rounds.make_integrated_round``
+dispatches it straight to ``aggregation.fedavg`` so the default behaviour is
+bit-for-bit identical to the pre-topology engine (a matmul by ``11^T / C``
+would only be float-close).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Base topology = full mesh. Subclasses override :meth:`matrix`.
+
+    ``matrix`` returns a float32 row-stochastic ``[C, C]`` array: entry
+    ``W[i, j]`` is the weight client i puts on client j's broadcast model.
+    ``key``/``round_idx`` are only consulted when :attr:`stochastic` is True;
+    both may be traced values (the engine calls this inside ``lax.scan``).
+    """
+
+    @property
+    def is_full_mesh(self) -> bool:
+        return False
+
+    @property
+    def stochastic(self) -> bool:
+        """True when the mixing matrix needs per-round randomness."""
+        return False
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FullMesh(Topology):
+    """Paper baseline: every broadcast reaches everyone, ``W = 11^T / C``."""
+
+    @property
+    def is_full_mesh(self) -> bool:
+        return True
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        return jnp.full((n_clients, n_clients), 1.0 / n_clients, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring(Topology):
+    """Static ring gossip: each client averages itself with ``neighbors``
+    clients on each side, uniformly over the *distinct* window members
+    (wrap-around never double-counts a client), so ``neighbors >= C//2``
+    degenerates to the full mesh numerically — though still mixed through
+    ``aggregation.mix``, not the ``fedavg`` fast path."""
+    neighbors: int = 1
+
+    def __post_init__(self):
+        if self.neighbors < 1:
+            raise ValueError("Ring needs neighbors >= 1")
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        w = np.zeros((n_clients, n_clients), np.float32)
+        span = range(-self.neighbors, self.neighbors + 1)
+        for i in range(n_clients):
+            for off in span:
+                w[i, (i + off) % n_clients] = 1.0
+        return jnp.asarray(w / w.sum(axis=1, keepdims=True))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomGraph(Topology):
+    """Per-round i.i.d. link dropout: each directed link (i, j != i) delivers
+    with probability ``p_link``; the self-link always does. Rows renormalize
+    over the delivered set, so ``W`` is row-stochastic for every draw.
+    ``p_link = 1`` is numerically the full mesh; ``p_link = 0`` is no
+    communication at all (every client keeps its own model)."""
+    p_link: float = 0.8
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_link <= 1.0:
+            raise ValueError("p_link must be in [0, 1]")
+
+    @property
+    def stochastic(self) -> bool:
+        return True
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        if key is None:
+            raise ValueError("RandomGraph.matrix needs a PRNG key")
+        if round_idx is not None:
+            key = jax.random.fold_in(key, round_idx)
+        links = jax.random.bernoulli(
+            key, self.p_link, (n_clients, n_clients)).astype(jnp.float32)
+        adj = jnp.maximum(links, jnp.eye(n_clients, dtype=jnp.float32))
+        return adj / jnp.sum(adj, axis=1, keepdims=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(Topology):
+    """Static partial participation: only the first ``n_active`` clients take
+    part in the broadcast round (they adopt the average over the active set);
+    the remaining clients keep their own models untouched."""
+    n_active: int
+
+    def __post_init__(self):
+        if self.n_active < 1:
+            raise ValueError("PartialParticipation needs n_active >= 1")
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        if self.n_active > n_clients:
+            raise ValueError(
+                f"n_active={self.n_active} exceeds n_clients={n_clients}")
+        w = np.eye(n_clients, dtype=np.float32)
+        w[:self.n_active, :] = 0.0
+        w[:self.n_active, :self.n_active] = 1.0 / self.n_active
+        return jnp.asarray(w)
+
+
+def from_name(name: str) -> Topology:
+    """Parse a CLI-friendly topology spec.
+
+    ``full`` | ``ring[:neighbors]`` | ``random[:p_link]`` |
+    ``partial:n_active`` — e.g. ``ring:2``, ``random:0.5``, ``partial:10``.
+    """
+    head, _, arg = name.strip().lower().partition(":")
+    if head in ("full", "full_mesh", "fullmesh", "mesh"):
+        return FullMesh()
+    if head == "ring":
+        return Ring(neighbors=int(arg) if arg else 1)
+    if head in ("random", "dropout", "p"):
+        return RandomGraph(p_link=float(arg) if arg else 0.8)
+    if head == "partial":
+        if not arg:
+            raise ValueError("partial topology needs a size: partial:<n_active>")
+        return PartialParticipation(n_active=int(arg))
+    raise ValueError(f"unknown topology {name!r} "
+                     "(expected full | ring[:k] | random[:p] | partial:n)")

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
-from repro.core import allocation, bounds, chain, rounds
+from repro.core import allocation, bounds, chain, rounds, topology
 from repro.data.pipeline import FLDataSource, LMDataSource
 from repro.models import registry
 from repro.models.mlp import init_mlp, mlp_loss
@@ -39,7 +39,8 @@ def run_mlp(args) -> dict:
         n_clients=blade.n_clients, tau=max(tau, 1), eta=blade.eta,
         n_lazy=blade.n_lazy, sigma2=blade.sigma2, dp_sigma=blade.dp_sigma,
         mine_attempts=allocation.mining_iterations(blade.beta),
-        difficulty_bits=4)
+        difficulty_bits=4, eval_every=args.eval_every,
+        topology=topology.from_name(args.topology))
     key = jax.random.key(blade.seed)
     src = FLDataSource(key, blade.n_clients, blade.samples_per_client,
                        blade.dirichlet_alpha, seed=blade.seed)
@@ -72,7 +73,9 @@ def run_arch_smoke(args) -> dict:
     shape = ShapeConfig("smoke", args.seq, args.clients * args.per_client, "train")
     spec = rounds.RoundSpec(n_clients=args.clients, tau=2, eta=1e-2,
                             n_lazy=args.lazy, sigma2=args.sigma2,
-                            mine_attempts=256, difficulty_bits=2)
+                            mine_attempts=256, difficulty_bits=2,
+                            eval_every=args.eval_every,
+                            topology=topology.from_name(args.topology))
     src = LMDataSource(cfg, shape, args.clients, seed=args.seed)
     key = jax.random.key(args.seed)
     params = registry.init_model(key, cfg)
@@ -112,6 +115,11 @@ def main():
     ap.add_argument("--eta", type=float, default=0.05)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", default="full",
+                    help="Steps 2+5 mixing: full | ring[:k] | random[:p] | "
+                         "partial:n (core/topology.py)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="global-loss eval stride (NaN on skipped rounds)")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args()
     if args.arch == "mlp":

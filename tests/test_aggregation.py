@@ -62,3 +62,71 @@ def test_fedavg_idempotent():
     twice = aggregation.fedavg(once)
     for k in p:
         assert jnp.allclose(once[k], twice[k], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Weighted aggregation: fedavg / aggregate_once / mix
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_once_weighted_matches_manual():
+    p = _params(jax.random.key(6), c=3)
+    w = jnp.array([1.0, 3.0, 4.0])  # |D_i| data sizes
+    out = aggregation.aggregate_once(p, weights=w)
+    want = (p["w1"][0] + 3 * p["w1"][1] + 4 * p["w1"][2]) / 8.0
+    assert out["w1"].shape == (8, 5)
+    assert jnp.allclose(out["w1"], want, atol=1e-5)
+
+
+def test_weighted_normalization_scale_invariant():
+    """|D_i| weights are ratios — scaling all weights changes nothing, in
+    fedavg, aggregate_once, and mix."""
+    p = _params(jax.random.key(7), c=4)
+    w = jnp.array([1.0, 2.0, 3.0, 4.0])
+    full = jnp.full((4, 4), 0.25)
+    for fn in (lambda w_: aggregation.fedavg(p, weights=w_),
+               lambda w_: aggregation.aggregate_once(p, weights=w_),
+               lambda w_: aggregation.mix(p, full, weights=w_)):
+        a, b = fn(w), fn(100.0 * w)
+        for k in p:
+            assert jnp.allclose(a[k], b[k], atol=1e-5), k
+
+
+def test_mix_full_mesh_weighted_equals_weighted_fedavg():
+    p = _params(jax.random.key(8), c=5)
+    w = jnp.array([5.0, 1.0, 2.0, 2.0, 10.0])
+    full = jnp.full((5, 5), 0.2)
+    got = aggregation.mix(p, full, weights=w)
+    want = aggregation.fedavg(p, weights=w)
+    for k in p:
+        assert jnp.allclose(got[k], want[k], atol=1e-5), k
+
+
+def test_mix_uniform_weights_equals_unweighted():
+    p = _params(jax.random.key(9), c=4)
+    w_mat = jnp.array([[0.5, 0.5, 0.0, 0.0],
+                       [0.0, 0.5, 0.5, 0.0],
+                       [0.0, 0.0, 0.5, 0.5],
+                       [0.5, 0.0, 0.0, 0.5]])
+    a = aggregation.mix(p, w_mat)
+    b = aggregation.mix(p, w_mat, weights=jnp.ones(4))
+    for k in p:
+        assert jnp.allclose(a[k], b[k], atol=1e-6), k
+
+
+def test_weighted_dtype_round_trip():
+    """float32 accumulation, but every leaf comes back in its own dtype."""
+    key = jax.random.key(10)
+    p = {"h": jax.random.normal(key, (4, 3, 3), jnp.float32).astype(jnp.bfloat16),
+         "f": jax.random.normal(key, (4, 6), jnp.float32)}
+    w = jnp.array([1.0, 2.0, 3.0, 4.0])
+    full = jnp.full((4, 4), 0.25)
+    for out in (aggregation.fedavg(p, weights=w),
+                aggregation.aggregate_once(p, weights=w),
+                aggregation.mix(p, full, weights=w)):
+        assert out["h"].dtype == jnp.bfloat16
+        assert out["f"].dtype == jnp.float32
+    # bf16 mean of identical values is exact — round trip loses nothing
+    same = {"h": jnp.ones((4, 3), jnp.bfloat16) * jnp.bfloat16(1.5)}
+    got = aggregation.mix(same, full, weights=w)
+    assert jnp.all(got["h"] == jnp.bfloat16(1.5))

@@ -134,3 +134,46 @@ def test_chain_roundtrip_and_tamper(digests):
     if len(digests) > 1:
         bad = led.tampered_copy(0, model_digest=digests[0] ^ 0xFFFF)
         assert not bad.validate_chain()
+
+
+# ---------------------------------------------------------------------------
+# Topology mixing (Steps 2+5 generalized)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 10), seed=st.integers(0, 1000),
+       n_leaves=st.integers(1, 3), weighted=st.booleans())
+def test_mix_full_mesh_equals_fedavg_on_random_pytrees(c, seed, n_leaves,
+                                                       weighted):
+    """aggregation.mix with the full-mesh W reproduces fedavg on arbitrary
+    random pytrees, with and without |D_i| weights."""
+    from repro.core import topology
+
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, n_leaves + 1)
+    shapes = [(c, 3), (c, 2, 4), (c, 5, 1, 2)]
+    p = {f"l{i}": jax.random.normal(keys[i], shapes[i % 3])
+         for i in range(n_leaves)}
+    w = jnp.abs(jax.random.normal(keys[-1], (c,))) + 0.1 if weighted else None
+    got = aggregation.mix(p, topology.FullMesh().matrix(c), weights=w)
+    want = aggregation.fedavg(p, weights=w)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 12), seed=st.integers(0, 1000),
+       ring_k=st.integers(1, 4), p_link=st.floats(0.0, 1.0))
+def test_shipped_topologies_row_stochastic(c, seed, ring_k, p_link):
+    from repro.core import topology
+
+    topos = [topology.FullMesh(), topology.Ring(min(ring_k, max(c // 2, 1))),
+             topology.RandomGraph(p_link),
+             topology.PartialParticipation(n_active=max(c // 2, 1))]
+    for t in topos:
+        w = np.asarray(t.matrix(c, key=jax.random.key(seed),
+                                round_idx=jnp.int32(seed % 7)))
+        assert (w >= 0).all()
+        np.testing.assert_allclose(w.sum(axis=1), np.ones(c), atol=1e-5)

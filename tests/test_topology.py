@@ -1,0 +1,270 @@
+"""Pluggable communication topology (Steps 2+5 as a mixing matrix) and the
+eval_every stride — scan-vs-loop equivalence for every shipped Topology."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, rounds, topology
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+ALL_TOPOLOGIES = [
+    topology.FullMesh(),
+    topology.Ring(neighbors=1),
+    topology.Ring(neighbors=2),
+    topology.RandomGraph(p_link=0.6),
+    topology.PartialParticipation(n_active=3),
+]
+
+
+def _ids(topo):
+    return type(topo).__name__ + "".join(
+        f"_{v}" for v in vars(topo).values())
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_ids)
+def test_matrix_row_stochastic(topo):
+    c = 5
+    w = topo.matrix(c, key=jax.random.key(0), round_idx=jnp.int32(3))
+    w = np.asarray(w)
+    assert w.shape == (c, c)
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w.sum(axis=1), np.ones(c), atol=1e-6)
+
+
+def test_full_mesh_matrix_uniform():
+    w = np.asarray(topology.FullMesh().matrix(4))
+    np.testing.assert_allclose(w, np.full((4, 4), 0.25), atol=1e-7)
+
+
+def test_ring_matrix_structure():
+    w = np.asarray(topology.Ring(neighbors=1).matrix(5))
+    third = pytest.approx(1 / 3, abs=1e-6)
+    assert w[0, 0] == third and w[0, 1] == third and w[0, 4] == third
+    assert w[0, 2] == 0.0 and w[0, 3] == 0.0
+
+
+def test_partial_participation_matrix():
+    w = np.asarray(topology.PartialParticipation(n_active=2).matrix(4))
+    np.testing.assert_allclose(w[:2, :2], np.full((2, 2), 0.5), atol=1e-7)
+    np.testing.assert_allclose(w[2:], np.eye(4)[2:], atol=1e-7)
+
+
+def test_random_graph_deterministic_and_round_varying():
+    topo = topology.RandomGraph(p_link=0.5)
+    key = jax.random.key(0)
+    w0 = np.asarray(topo.matrix(8, key=key, round_idx=jnp.int32(0)))
+    w0b = np.asarray(topo.matrix(8, key=key, round_idx=jnp.int32(0)))
+    w1 = np.asarray(topo.matrix(8, key=key, round_idx=jnp.int32(1)))
+    np.testing.assert_array_equal(w0, w0b)      # same key+round -> same graph
+    assert not np.array_equal(w0, w1)           # rounds draw fresh graphs
+    assert np.all(np.diag(w0) > 0)              # self-link always delivers
+
+
+def test_ring_wraparound_never_double_counts():
+    # neighbors >= C//2 degenerates to the exact full mesh (distinct window)
+    w = np.asarray(topology.Ring(neighbors=2).matrix(4))
+    np.testing.assert_allclose(w, np.full((4, 4), 0.25), atol=1e-7)
+
+
+def test_invalid_params_fail_at_construction():
+    with pytest.raises(ValueError):
+        topology.Ring(neighbors=0)
+    with pytest.raises(ValueError):
+        topology.RandomGraph(p_link=1.5)
+    with pytest.raises(ValueError):
+        topology.PartialParticipation(n_active=0)
+    with pytest.raises(ValueError):
+        topology.PartialParticipation(n_active=5).matrix(4)
+
+
+def test_random_graph_requires_key():
+    with pytest.raises(ValueError):
+        topology.RandomGraph(0.5).matrix(4)
+
+
+def test_from_name_round_trips():
+    assert topology.from_name("full") == topology.FullMesh()
+    assert topology.from_name("ring:2") == topology.Ring(neighbors=2)
+    assert topology.from_name("random:0.3") == topology.RandomGraph(p_link=0.3)
+    assert topology.from_name("partial:7") == \
+        topology.PartialParticipation(n_active=7)
+    with pytest.raises(ValueError):
+        topology.from_name("torus")
+
+
+def test_topologies_hashable_in_roundspec():
+    # RoundSpec is an lru_cache key for the compiled runners
+    specs = {rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, topology=t)
+             for t in ALL_TOPOLOGIES}
+    assert len(specs) == len(ALL_TOPOLOGIES)
+    assert rounds.RoundSpec(n_clients=4, tau=1, eta=0.1) == \
+        rounds.RoundSpec(n_clients=4, tau=1, eta=0.1,
+                         topology=topology.FullMesh())
+
+
+# ---------------------------------------------------------------------------
+# mix vs fedavg
+# ---------------------------------------------------------------------------
+
+
+def _params(key, c=6):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (c, 8, 5)),
+            "b": jax.random.normal(k2, (c, 5))}
+
+
+def test_mix_full_mesh_equals_fedavg():
+    p = _params(jax.random.key(0))
+    w = topology.FullMesh().matrix(6)
+    got = aggregation.mix(p, w)
+    want = aggregation.fedavg(p)
+    for k in p:
+        assert jnp.allclose(got[k], want[k], atol=1e-5), k
+
+
+def test_mix_identity_is_noop():
+    p = _params(jax.random.key(1), c=4)
+    got = aggregation.mix(p, jnp.eye(4))
+    for k in p:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(p[k]),
+                                   atol=1e-6)
+
+
+def test_partial_participation_mix_keeps_inactive():
+    c, n_active = 6, 3
+    p = _params(jax.random.key(2), c=c)
+    w = topology.PartialParticipation(n_active=n_active).matrix(c)
+    got = aggregation.mix(p, w)
+    for k in p:
+        # inactive clients keep their exact models
+        np.testing.assert_allclose(np.asarray(got[k][n_active:]),
+                                   np.asarray(p[k][n_active:]), atol=1e-6)
+        # active clients hold the active-set average
+        want = np.mean(np.asarray(p[k][:n_active]), axis=0)
+        np.testing.assert_allclose(np.asarray(got[k][0]), want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Round engine: scan-vs-loop equivalence for every shipped topology
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_ids)
+def test_scan_matches_python_loop_per_topology(topo):
+    """The compiled lax.scan driver and the per-round Python loop agree —
+    params, metric history, ledger hash links — under every Topology,
+    including the stochastic per-round graph."""
+    n_clients, k_rounds = 5, 3
+    key = jax.random.key(21)
+    src = FLDataSource(key, n_clients, samples_per_client=32, seed=21)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=2, eta=0.1, n_lazy=1,
+                            sigma2=0.05, mine_attempts=64, difficulty_bits=2,
+                            topology=topo)
+    run_key = jax.random.fold_in(key, 2)
+
+    st_py, hist_py, led_py = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.round_batch, run_key, k_rounds)
+    st_sc, hist_sc, led_sc = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, src.static_batch(), run_key, k_rounds)
+
+    for a, b in zip(jax.tree.leaves(st_py.params), jax.tree.leaves(st_sc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist_py == hist_sc
+    assert led_sc.validate_chain()
+    assert [b.header_hash for b in led_py.blocks] == \
+        [b.header_hash for b in led_sc.blocks]
+
+
+def test_full_mesh_round_collapses_spread_ring_does_not():
+    """After one full-mesh round all clients agree (paper Step 5); a ring
+    leaves residual disagreement — the scenario axis the refactor opens."""
+    n_clients = 6
+    key = jax.random.key(4)
+    src = FLDataSource(key, n_clients, samples_per_client=32, seed=4)
+    params = init_mlp(jax.random.fold_in(key, 1))
+
+    def spread_after_round(topo):
+        spec = rounds.RoundSpec(n_clients=n_clients, tau=2, eta=0.1,
+                                mine_attempts=32, topology=topo)
+        fn = jax.jit(rounds.make_integrated_round(mlp_loss, spec))
+        st = rounds.init_state(params, jax.random.key(2), n_clients)
+        st, _ = fn(st, src.round_batch(0))
+        return float(aggregation.client_divergence(st.params))
+
+    assert spread_after_round(topology.FullMesh()) < 1e-5
+    assert spread_after_round(topology.Ring(neighbors=1)) > 1e-4
+
+
+def test_default_topology_bit_for_bit_with_explicit_full_mesh():
+    """RoundSpec() (the pre-refactor engine) and an explicit FullMesh produce
+    byte-identical histories — the baseline did not move."""
+    key = jax.random.key(9)
+    src = FLDataSource(key, 4, samples_per_client=32, seed=9)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    kw = dict(n_clients=4, tau=2, eta=0.1, n_lazy=1, sigma2=0.02,
+              dp_sigma=0.1, mine_attempts=64)
+    run = lambda spec: rounds.run_blade_fl(
+        mlp_loss, spec, params, src.static_batch(),
+        jax.random.fold_in(key, 2), 3)
+    _, hist_default, led_a = run(rounds.RoundSpec(**kw))
+    _, hist_mesh, led_b = run(
+        rounds.RoundSpec(**kw, topology=topology.FullMesh()))
+    assert hist_default == hist_mesh
+    assert [b.header_hash for b in led_a.blocks] == \
+        [b.header_hash for b in led_b.blocks]
+
+
+# ---------------------------------------------------------------------------
+# eval_every stride
+# ---------------------------------------------------------------------------
+
+
+def _run_stride(eval_every, k_rounds=4, seed=13, batches="static"):
+    key = jax.random.key(seed)
+    src = FLDataSource(key, 4, samples_per_client=32, seed=seed)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=4, tau=2, eta=0.1, mine_attempts=64,
+                            difficulty_bits=2, eval_every=eval_every)
+    b = src.static_batch() if batches == "static" else src.round_batch
+    return rounds.run_blade_fl(mlp_loss, spec, params, b,
+                               jax.random.fold_in(key, 2), k_rounds)
+
+
+def test_eval_every_nan_masks_skipped_rounds():
+    _, hist, _ = _run_stride(eval_every=2, k_rounds=4)
+    flags = [math.isfinite(h["global_loss"]) for h in hist]
+    assert flags == [False, True, False, True]  # eval on rounds 1 and 3
+
+
+def test_eval_every_preserves_dynamics_and_values():
+    """The stride only masks the metric — params dynamics and the evaluated
+    entries match the eval-every-round run exactly, on both driver paths."""
+    st1, hist1, led1 = _run_stride(eval_every=1)
+    st2, hist2, led2 = _run_stride(eval_every=2)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [b.header_hash for b in led1.blocks] == \
+        [b.header_hash for b in led2.blocks]
+    for h1, h2 in zip(hist1, hist2):
+        if math.isfinite(h2["global_loss"]):
+            assert h1["global_loss"] == h2["global_loss"]
+    # python loop agrees with the scan engine, NaN mask included
+    _, hist_py, _ = _run_stride(eval_every=2, batches="callable")
+    for hs, hp in zip(hist2, hist_py):
+        assert (hs["global_loss"] == hp["global_loss"]) or (
+            math.isnan(hs["global_loss"]) and math.isnan(hp["global_loss"]))
+
+
+def test_eval_every_default_history_unchanged():
+    _, hist, _ = _run_stride(eval_every=1)
+    assert all(math.isfinite(h["global_loss"]) for h in hist)
