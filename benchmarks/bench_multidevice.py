@@ -1,0 +1,123 @@
+"""Rounds/sec of the client-sharded K-round scan engine vs device count.
+
+Each device count runs in its own subprocess because
+``--xla_force_host_platform_device_count`` must be set before the first jax
+import — the same trick the dry-run and the multi-device tests use. The
+child runs the identical config through ``run_blade_fl_scan`` with a
+``make_client_mesh`` of that size (1 device = the plain single-device scan)
+and reports warm rounds/sec.
+
+Read CPU numbers as the COST CURVE of the sharded lowering, not a speedup
+claim: host "devices" are threads carved out of the same CPU, so the
+per-client math gets no new FLOPs and the all-gathers/ppermutes are pure
+overhead. What the curve shows is that overhead staying small (the engine's
+collectives are O(1) per round), which is the quantity that transfers to a
+real mesh where D devices DO bring D× the compute. The engine's bitwise
+contract (tests/test_multidevice_scan.py) holds within a process; ACROSS
+the child processes here the loss values can drift in the last ulps,
+because ``--xla_force_host_platform_device_count`` changes XLA:CPU's
+intra-op thread partitioning and with it the association of large
+reductions — the per-run ``chain_valid`` is the correctness signal.
+
+  PYTHONPATH=src python -m benchmarks.bench_multidevice [--devices 1,2,4,8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common  # noqa: E402
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CHILD = textwrap.dedent("""
+    import os, sys, json, time
+    n_dev = int(sys.argv[1]); n_rounds = int(sys.argv[2])
+    n_clients = int(sys.argv[3]); samples = int(sys.argv[4])
+    tau = int(sys.argv[5]); reps = int(sys.argv[6])
+    if n_dev > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev}")
+    import jax
+    from repro.core import rounds
+    from repro.data.pipeline import FLDataSource
+    from repro.launch.mesh import make_client_mesh
+    from repro.models.mlp import init_mlp, mlp_loss
+
+    key = jax.random.key(0)
+    src = FLDataSource(key, n_clients, samples, seed=0)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=tau, eta=0.05,
+                            n_lazy=2, sigma2=0.01, mine_attempts=256,
+                            difficulty_bits=2)
+    mesh = make_client_mesh(n_dev) if n_dev > 1 else None
+    batch, rk = src.static_batch(), jax.random.fold_in(key, 2)
+
+    def run():
+        return rounds.run_blade_fl_scan(mlp_loss, spec, params, batch, rk,
+                                        n_rounds, mesh=mesh)
+
+    run()                                  # warm: compile
+    t0 = time.time()
+    for _ in range(reps):
+        state, hist, ledger = run()
+    wall = (time.time() - t0) / reps
+    print(json.dumps({"devices": n_dev, "rounds_per_s": n_rounds / wall,
+                      "wall_s": wall, "chain_valid": ledger.validate_chain(),
+                      "final_global_loss": hist[-1]["global_loss"]}))
+""")
+
+
+def bench(device_counts=(1, 2, 4, 8), n_rounds: int = 16, n_clients: int = 16,
+          samples: int = 64, tau: int = 4, reps: int = 3) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = {}
+    for d in device_counts:
+        if n_clients % d:
+            print(f"# skip devices={d}: {n_clients} clients not divisible")
+            continue
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(d), str(n_rounds),
+             str(n_clients), str(samples), str(tau), str(reps)],
+            capture_output=True, text=True, env=env, timeout=900)
+        if proc.returncode != 0:
+            print(f"# devices={d} FAILED: {proc.stderr[-500:]}")
+            continue
+        res = json.loads(proc.stdout.strip().splitlines()[-1])
+        out[d] = res
+        common.csv_line(
+            f"multidevice_scan_D{d}_K{n_rounds}_C{n_clients}",
+            res["wall_s"] / n_rounds * 1e6,
+            f"rounds_per_s={res['rounds_per_s']:.1f}")
+    if 1 in out:
+        base = out[1]["rounds_per_s"]
+        for d, res in out.items():
+            res["vs_single_device"] = res["rounds_per_s"] / base
+    return out
+
+
+def run():
+    return bench()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", default="1,2,4,8",
+                    help="comma list of host-device counts to sweep")
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--samples", type=int, default=64)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=3)
+    a = ap.parse_args()
+    counts = tuple(int(x) for x in a.devices.split(","))
+    print(json.dumps(bench(counts, a.rounds, a.clients, a.samples, a.tau,
+                           a.reps), indent=1))

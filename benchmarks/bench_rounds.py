@@ -7,10 +7,17 @@ on device and transfers once. Both paths are timed warm (compile excluded),
 so the gap shown is pure per-round dispatch + sync overhead — the quantity
 the ROADMAP's "fast as the hardware allows" target cares about.
 
-At the paper-scale default (C=20, 128 samples) the scan path is ~2x the
-per-round driver on CPU; at toy sizes (C<=4, <=32 samples) XLA:CPU executes
+At the paper-scale default (C=20, 128 samples) the scan path measures
+~1.1-1.2x the per-round driver on CPU with the current engine (the PR 1
+monolithic round measured ~2x; the stage pipeline and the fusion barriers
+behind the sharded engine's bitwise contract narrowed the CPU gap — see
+README "Current benchmark anchors"). At toy sizes (C<=4, <=32 samples)
+XLA:CPU executes
 the per-round program faster than the same body nested in the scan's while
-loop, so don't benchmark below the default scale.
+loop — a dispatch-vs-loop-overhead crossover, not a bug; see
+"Micro-sim dispatch behavior" in docs/architecture.md for the explanation
+and the rule of thumb (use the scan engine at paper scale and above, the
+per-round driver for micro-sims below the crossover).
 
   PYTHONPATH=src python -m benchmarks.bench_rounds [--rounds 32] [--clients 20]
 """

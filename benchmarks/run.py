@@ -18,8 +18,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import (bench_kernels, bench_rounds, bench_topology,  # noqa: E402
-                        paper_tables, roofline)
+from benchmarks import (bench_kernels, bench_multidevice, bench_rounds,  # noqa: E402
+                        bench_topology, paper_tables, roofline)
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                    "bench_results.json")
@@ -29,7 +29,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,table2,...,fig10,kernels,rounds,"
-                         "topology,roofline")
+                         "topology,multidevice,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="mnist proxy only (skip fashion)")
     ap.add_argument("--seed", type=int, default=0)
@@ -67,6 +67,8 @@ def main() -> None:
         results["rounds_scan_vs_loop"] = bench_rounds.bench()
     if only is None or "topology" in only:
         results["topology_loss_vs_k"] = bench_topology.bench()
+    if only is None or "multidevice" in only:
+        results["multidevice_rounds_per_s"] = bench_multidevice.bench()
     if only is None or "roofline" in only:
         results["roofline_pod16x16"] = roofline.run("pod16x16")
         results["roofline_pod2x16x16"] = roofline.run("pod2x16x16")

@@ -9,18 +9,56 @@ is identical to N gossip broadcasts; the ICI ring plays the gossip network.
 ``aggregate`` is the pure-jnp path; ``repro.kernels.fedavg`` provides the
 fused Pallas kernel (aggregate + DP/lazy noise in one VMEM pass) selected by
 ``use_kernel=True``.
+
+Mesh lowerings (the ``mix_*`` family)
+-------------------------------------
+
+Every ``mix_*`` function takes an optional ``axis_name``. With
+``axis_name=None`` it is the plain device-local math; with a mesh axis name
+(or tuple of names) it is the same computation expressed with collectives,
+meant to run inside ``shard_map`` with the client axis sharded over that
+axis. The engine (``core/rounds``) picks the lowering through the
+:class:`repro.core.topology.MixLowering` each ``Topology`` advertises:
+
+  ``mix_all_reduce``      FullMesh — one weighted all-reduce over the client
+                          axis (all-gather + replicated reduce).
+  ``mix_neighbor_halo``   Ring — two neighbor ``collective_permute``s build a
+                          halo; each client window-averages locally.
+  ``mix_gather``          general / sparse ``W`` — masked gather fallback:
+                          all-gather the broadcast set, apply the dense
+                          mixing matrix, keep the local rows.
+
+Bit-for-bit contract: the sharded path of each lowering reproduces its dense
+path EXACTLY, not just to float tolerance. Cross-client fp32 reductions are
+therefore never computed as a psum of per-shard partial sums (that reorders
+the fp32 association and would change the model digest, breaking the hash
+chain) — instead the full client axis is materialized (all-gather is itself
+a permute pattern on the ICI ring) and the reduction runs replicated with
+the identical HLO the single-device engine executes. The neighbor-halo path
+accumulates offsets in the same fixed order as its dense roll-based twin, so
+it too is bitwise stable. A true psum would move ~C/D× less data for the
+full mesh; it is deliberately not used — the hash-linked ledger is the
+ground truth the sharded engine must reproduce.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+AxisName = Union[str, Tuple[str, ...], None]
+
 
 def fedavg(params, weights: Optional[jnp.ndarray] = None):
     """Mean (optionally weighted by |D_i|) over leading client axis C,
-    broadcast back to every client: returns same-shaped pytree."""
+    broadcast back to every client: returns same-shaped pytree.
+
+    >>> import jax.numpy as jnp
+    >>> out = fedavg({"w": jnp.array([[0.0], [2.0], [4.0]])})
+    >>> [float(v) for v in out["w"].ravel()]
+    [2.0, 2.0, 2.0]
+    """
 
     def one(leaf):
         c = leaf.shape[0]
@@ -73,6 +111,176 @@ def replicate(params, n_clients: int):
     """Lift a single model to the client axis (round-0 initialization)."""
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (n_clients,) + a.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# Client-axis collectives (shard_map helpers)
+# ---------------------------------------------------------------------------
+
+
+def _axis_tuple(axis_name: AxisName) -> Tuple[str, ...]:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
+def client_all_gather(tree, axis_name: AxisName):
+    """Materialize the full client axis on every shard.
+
+    Identity-plus-barrier when ``axis_name`` is None (single-device: the
+    tree already holds all C clients). Inside ``shard_map`` this turns every
+    ``[C/D, ...]`` leaf into the full ``[C, ...]`` leaf, concatenated in
+    shard order — so the result is bitwise identical to the array the
+    single-device engine holds.
+
+    The ``optimization_barrier`` (applied in BOTH modes) is load-bearing for
+    the bitwise contract: downstream full reductions to a scalar (the model
+    digest's per-leaf sum, ``global_loss``/``local_loss_mean`` means, the
+    divergence diagnostic) are vectorized by XLA:CPU with lane-partial
+    accumulators whose association can change with the fusion context. The
+    barrier pins the reduction input to a materialized buffer in the sharded
+    and single-device programs alike, so both emit the identical standalone
+    reduce. Axis-0-only reductions (``fedavg``'s mean, the mix matmul) keep
+    a fixed per-column order regardless and don't need this.
+    """
+    if axis_name is None:
+        return jax.lax.optimization_barrier(tree)
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=True), tree)
+    return jax.lax.optimization_barrier(gathered)
+
+
+def client_shard_index(axis_name: AxisName) -> jnp.ndarray:
+    """Linear index of this shard along the (possibly compound) client axis,
+    matching the order ``all_gather(..., tiled=True)`` concatenates shards."""
+    idx = jnp.int32(0)
+    for name in _axis_tuple(axis_name):
+        idx = idx * jax.lax.psum(1, name) + jax.lax.axis_index(name)
+    return idx
+
+
+def client_local_rows(full_tree, axis_name: AxisName, n_shards: int):
+    """Slice this shard's block of clients back out of full ``[C, ...]``
+    leaves (inverse of :func:`client_all_gather`). Identity when
+    ``axis_name`` is None or ``n_shards == 1`` outside ``shard_map``."""
+    if axis_name is None:
+        return full_tree
+    idx = client_shard_index(axis_name)
+
+    def one(leaf):
+        local = leaf.shape[0] // n_shards
+        return jax.lax.dynamic_slice_in_dim(leaf, idx * local, local, axis=0)
+
+    return jax.tree.map(one, full_tree)
+
+
+# ---------------------------------------------------------------------------
+# Topology-keyed mix lowerings (see module docstring for the bitwise contract)
+# ---------------------------------------------------------------------------
+
+
+def mix_all_reduce(params, weights: Optional[jnp.ndarray] = None, *,
+                   axis_name: AxisName = None, n_shards: int = 1, full=None):
+    """FullMesh lowering: one weighted all-reduce over the client axis.
+
+    Dense (``axis_name=None``) this IS :func:`fedavg`. Sharded, the
+    all-reduce is realized gather-side — all-gather the client axis (pass a
+    pre-gathered ``full`` tree to reuse the communicate stage's gather),
+    run the IDENTICAL :func:`fedavg` replicated on every shard, and keep
+    the local client block — so the result matches the single-device
+    ``fedavg`` bit for bit (one shared implementation, nothing to drift).
+    """
+    if axis_name is None:
+        return fedavg(params, weights)
+    full = client_all_gather(params, axis_name) if full is None else full
+    return client_local_rows(fedavg(full, weights), axis_name, n_shards)
+
+
+def mix_rolls(params, offsets: Sequence[int], weight: float):
+    """Dense twin of the neighbor-halo lowering: client ``i`` adopts
+    ``weight * sum_off params[(i + off) % C]`` with the offsets accumulated
+    in the given (fixed) order. For ``Ring(k)`` with window ``2k+1 <= C``
+    this equals ``mix(params, Ring(k).matrix(C))`` up to fp32 association —
+    the roll form is the canonical one because the halo path can reproduce
+    it bitwise with two ``collective_permute``s.
+
+    The window sum accumulates RAW terms and scales by ``weight`` once at
+    the end: a per-term ``acc + w * x`` chain invites XLA to contract the
+    multiply into an FMA, and whether it does varies with fusion context —
+    exactly the last-ulp drift the bitwise contract forbids. Plain add
+    chains have no multiply to contract, so dense and halo stay stable.
+
+    >>> import jax.numpy as jnp
+    >>> p = {"w": jnp.arange(4.0).reshape(4, 1)}
+    >>> out = mix_rolls(p, offsets=(-1, 0, 1), weight=1.0 / 3.0)
+    >>> [round(float(v), 4) for v in out["w"].ravel()]
+    [1.3333, 1.0, 2.0, 1.6667]
+    """
+    w = jnp.float32(weight)
+
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        acc = jnp.roll(x, -offsets[0], axis=0)
+        for off in offsets[1:]:
+            acc = acc + jnp.roll(x, -off, axis=0)
+        return (acc * w).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def mix_neighbor_halo(params, offsets: Sequence[int], weight: float,
+                      axis_name: AxisName):
+    """Ring lowering on the mesh: neighbor ``collective_permute``s.
+
+    Each shard exchanges its client block with its two ring neighbors (one
+    ``ppermute`` per direction), assembles the ``[3·C/D, ...]`` halo, and
+    window-averages its own clients locally — communication is
+    O(window), independent of C, versus the all-gather fallback's O(C).
+    Accumulation order and fp32 math match :func:`mix_rolls` exactly, so
+    dense and sharded Ring mixes are bitwise identical. Requires
+    ``max(|off|) <= C/D`` (one-block halo) and a single mesh axis — the
+    engine falls back to the gathered :func:`mix_rolls` otherwise.
+    """
+    if axis_name is None:
+        return mix_rolls(params, offsets, weight)
+    (name,) = _axis_tuple(axis_name)
+    n_dev = jax.lax.psum(1, name)
+    fwd = [((j + 1) % n_dev, j) for j in range(n_dev)]   # nxt[j] = block j+1
+    bwd = [((j - 1) % n_dev, j) for j in range(n_dev)]   # prv[j] = block j-1
+    w = jnp.float32(weight)
+
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        local = x.shape[0]
+        nxt = jax.lax.ppermute(x, name, fwd)
+        prv = jax.lax.ppermute(x, name, bwd)
+        ext = jnp.concatenate([prv, x, nxt], axis=0)     # rows -local..2·local
+        # raw-sum-then-scale, mirroring mix_rolls (FMA-contraction safety)
+        acc = jax.lax.dynamic_slice_in_dim(
+            ext, local + offsets[0], local, axis=0)
+        for off in offsets[1:]:
+            acc = acc + jax.lax.dynamic_slice_in_dim(
+                ext, local + off, local, axis=0)
+        return (acc * w).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
+               *, axis_name: AxisName = None, n_shards: int = 1, full=None):
+    """General/sparse-``W`` fallback: masked gather pattern.
+
+    All-gather the broadcast set (a permute pattern on the ring; pass a
+    pre-gathered ``full`` tree to reuse the communicate stage's gather),
+    apply the dense row-stochastic mask ``W`` with the identical full-width
+    matmul the single-device engine runs (bitwise equal — same HLO on the
+    same ``[C, ...]`` input), and keep only this shard's client rows. A
+    SUMMA-style permute-and-accumulate over shard blocks would halve peak
+    memory but reorders the fp32 contraction, so it is not used.
+    """
+    if axis_name is None:
+        return mix(params, W, weights)
+    full = client_all_gather(params, axis_name) if full is None else full
+    mixed = mix(full, W, weights)
+    return client_local_rows(mixed, axis_name, n_shards)
 
 
 def client_divergence(params) -> jnp.ndarray:

@@ -72,6 +72,30 @@ and report NaN, so the history keeps a static ``[K]`` layout. The default
 ``eval_every=1`` keeps the exact pre-stride computation (no cond in the
 jaxpr). Choose K divisible by ``eval_every`` when you need
 ``history[-1]["global_loss"]`` finite.
+
+Client-sharded execution (mesh + plan)
+--------------------------------------
+
+``run_blade_fl_scan(..., mesh=..., plan=...)`` runs the SAME K-round scan
+client-sharded over a device mesh: the whole ``lax.scan`` executes inside a
+``shard_map`` whose carry layout comes from
+``sharding.plans.scan_carry_plan`` — params and batch split along the
+client axis over the plan's mesh axes, PRNG key / round counter / prev-hash
+(the ledger link) replicated — so the donated carry never leaves the
+devices for the whole horizon and the end-of-run metrics transfer is still
+the only host sync. Every stage factory takes ``axis_name``/``n_shards``:
+with ``axis_name=None`` (the default) each stage is exactly the
+single-device computation; with a mesh axis, per-client work (local GD, the
+PoW race) runs on local client blocks and every cross-client step goes
+through the collectives in ``core/aggregation`` — the mix via the
+``MixLowering`` the topology advertises, the digest / divergence /
+global-loss reductions via all-gather + replicated full-width math. That
+discipline (never psum partial fp32 sums) is what makes the sharded engine
+bit-for-bit equal to the single-device scan — same params, same metrics,
+same hash-linked ledger — as ``tests/test_multidevice_scan.py`` asserts on
+a 4-device host mesh for every shipped topology. (The bitwise claim is for
+a fixed backend; CPU↔TPU still differ, and TPU tiling may reorder
+per-client matmuls.)
 """
 from __future__ import annotations
 
@@ -81,9 +105,12 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import (aggregation, chain, detection, dp as dp_lib,
                         lazy as lazy_lib, mining, topology as topology_lib)
+from repro.sharding import plans as plans_lib
 
 LossFn = Callable[[Any, Any], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
 
@@ -163,11 +190,18 @@ def _microbatched_grad(loss_fn: LossFn, n_mb: int):
 _TOPOLOGY_SALT = 0x746F706F  # "topo"
 
 
-def make_local_train(loss_fn: LossFn, spec: RoundSpec):
-    """Step 1 stage: ``(params, batch) -> (params, local_losses [C])`` —
-    tau collective-free GD iterations per client. The carried loss is the
-    one observed at the last iteration (free — value_and_grad computes it
-    anyway)."""
+def make_local_train(loss_fn: LossFn, spec: RoundSpec, n_shards: int = 1):
+    """Step 1 stage factory: tau local GD iterations per client, eq. 3.
+
+    Returns ``local_train(params, batch) -> (params, local_losses)``. Both
+    inputs carry a leading client axis — the full ``C`` single-device, or
+    this shard's ``C / n_shards`` block inside ``shard_map`` — and the stage
+    is collective-free either way: clients never talk during Step 1, which
+    is exactly why the client axis shards cleanly. Each iteration is one
+    full-batch ``value_and_grad`` per client (``spec.microbatches > 1``
+    splits it into remat'd grad-accumulation microbatches); the carried
+    per-client loss is the one observed at the last iteration (free —
+    ``value_and_grad`` computes it anyway)."""
     if spec.microbatches > 1:
         grad_fn = _microbatched_grad(loss_fn, spec.microbatches)
     else:
@@ -177,6 +211,7 @@ def make_local_train(loss_fn: LossFn, spec: RoundSpec):
             return loss, grads
 
     per_client_grad = jax.vmap(grad_fn)
+    n_local = spec.n_clients // n_shards
 
     def local_train(params, batch):
         def local_iter(_, carry):
@@ -186,65 +221,142 @@ def make_local_train(loss_fn: LossFn, spec: RoundSpec):
                              p, grads)
             return (p, losses)
 
-        loss0 = jnp.zeros((spec.n_clients,), jnp.float32)
+        loss0 = jnp.zeros((n_local,), jnp.float32)
         return jax.lax.fori_loop(0, spec.tau, local_iter, (params, loss0))
 
     return local_train
 
 
-def make_perturb(spec: RoundSpec):
-    """Step 1 tail stage: lazy plagiarism + noise (eq. 7), then optional §6
-    DP noise on the models about to be broadcast."""
+def make_perturb(spec: RoundSpec, axis_name=None, n_shards: int = 1):
+    """Step 1 tail stage factory: what each client broadcasts instead of its
+    honest model.
+
+    Returns ``perturb(params, k_lazy, k_dp)``: lazy clients plagiarize their
+    source client's fresh model and add N(0, sigma^2) disguise noise
+    (eq. 7), then every client optionally adds §6 DP Gaussian noise to the
+    model it is about to broadcast. With ``n_lazy == 0`` and
+    ``dp_sigma == 0`` the stage is the identity.
+
+    Sharded, plagiarism is a cross-shard gather (a lazy client's source may
+    live on another device) and the noise draws must equal the
+    single-device ones — so the stage all-gathers the client axis, applies
+    the IDENTICAL full-``[C, ...]`` transform (same per-leaf key split, same
+    noise shapes — bitwise the same draws), and slices this shard's rows
+    back out. Cost: one params gather per round, only when the stage is
+    active — and that gathered tree is returned as ``full`` (None when the
+    stage was a no-op) so the communicate stage reuses it instead of
+    re-gathering the model it just materialized."""
+    active = spec.n_lazy > 0 or spec.dp_sigma > 0.0
 
     def perturb(params, k_lazy, k_dp):
-        params = lazy_lib.apply_lazy(params, k_lazy, spec.n_clients,
-                                     spec.n_lazy, spec.sigma2)
-        return dp_lib.privatize(params, k_dp, spec.dp_sigma)
+        if not active:
+            return params, None
+        full = aggregation.client_all_gather(params, axis_name)
+        full = lazy_lib.apply_lazy(full, k_lazy, spec.n_clients,
+                                   spec.n_lazy, spec.sigma2)
+        full = dp_lib.privatize(full, k_dp, spec.dp_sigma)
+        return aggregation.client_local_rows(full, axis_name, n_shards), full
 
     return perturb
 
 
-def make_communicate(spec: RoundSpec):
-    """Steps 2+5 stage: ``(params, prev_params, k_topo, round_idx) ->
-    (mixed_params, digest, divergence, extra_metrics)``.
+def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
+    """Steps 2+5 stage factory: ``(params, prev_params, k_topo, round_idx)
+    -> (mixed_params, digest, divergence, extra_metrics)``.
 
     Header digest and optional plagiarism screening run on the broadcast set
     (every client sees every *delivered* model; the digest always covers the
     full broadcast so the hash chain is topology-independent), divergence is
-    the pre-mix client spread (delta diagnostic, Def. 1), then the topology's
-    row-stochastic ``W`` mixes the models. ``FullMesh`` dispatches straight
-    to ``fedavg`` — bit-for-bit the paper baseline."""
-    topo = spec.topology
+    the pre-mix client spread (delta diagnostic, Def. 1), then the
+    topology's row-stochastic ``W`` mixes the models — through the
+    :class:`~repro.core.topology.MixLowering` the topology advertises:
 
-    def communicate(params, prev_params, k_topo, round_idx):
-        digest = mining.digest_tree(params)
+      * ``all_reduce`` — FullMesh; single-device this IS
+        ``aggregation.fedavg``, bit-for-bit the paper baseline.
+      * ``neighbor_permute`` — Ring; fixed-order window accumulation, halo
+        ``collective_permute``s on the mesh (falls back to the gathered
+        roll form when the window overruns the shard block).
+      * ``gather`` — any ``W``; the dense ``aggregation.mix`` matmul,
+        all-gather + local-rows slice on the mesh.
+
+    Sharded, the digest / divergence / detection diagnostics all-gather the
+    broadcast set and run the identical full-width math (the digest folds a
+    cross-client fp32 sum per leaf — partial psums would change its bits and
+    with it every downstream hash link); the FullMesh and gather mixes reuse
+    that same gathered tree, so diagnostics add no extra collective. When
+    the perturb stage already gathered the broadcast set, its ``full`` tree
+    is accepted (re-barriered, so the digest reduce stays fusion-pinned)
+    instead of gathering twice."""
+    topo = spec.topology
+    low = topo.lowering(spec.n_clients)
+    n_local = spec.n_clients // n_shards
+    # halo needs the window inside one neighbor block and a single mesh axis
+    halo_ok = (low.kind == topology_lib.NEIGHBOR_PERMUTE
+               and (axis_name is None or isinstance(axis_name, str)
+                    or len(axis_name) == 1)
+               and low.offsets and -min(low.offsets) <= n_local
+               and max(low.offsets) <= n_local)
+    halo_axis = (axis_name if isinstance(axis_name, (str, type(None)))
+                 else axis_name[0])
+
+    def communicate(params, prev_params, k_topo, round_idx, full=None):
+        if full is None:
+            full = aggregation.client_all_gather(params, axis_name)
+        else:
+            full = jax.lax.optimization_barrier(full)
+        digest = mining.digest_tree(full)
         extra = {}
         if spec.detect_lazy:
+            prev_full = aggregation.client_all_gather(prev_params, axis_name)
             suspects, _ = detection.detect_lazy_round(
-                params, prev_params, threshold_frac=spec.detect_threshold)
+                full, prev_full, threshold_frac=spec.detect_threshold)
             extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-        divergence = aggregation.client_divergence(params)
-        if topo.is_full_mesh:
-            params = aggregation.fedavg(params)
+        divergence = aggregation.client_divergence(full)
+        if low.kind == topology_lib.ALL_REDUCE:
+            params = aggregation.mix_all_reduce(params, axis_name=axis_name,
+                                                n_shards=n_shards, full=full)
+        elif halo_ok:
+            params = aggregation.mix_neighbor_halo(params, low.offsets,
+                                                   low.weight, halo_axis)
+        elif low.kind == topology_lib.NEIGHBOR_PERMUTE:
+            mixed = aggregation.mix_rolls(full, low.offsets, low.weight)
+            params = aggregation.client_local_rows(mixed, axis_name, n_shards)
         else:
             w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
-            params = aggregation.mix(params, w)
+            params = aggregation.mix_gather(params, w, axis_name=axis_name,
+                                            n_shards=n_shards, full=full)
         return params, digest, divergence, extra
 
     return communicate
 
 
-def make_mine(spec: RoundSpec):
-    """Steps 3+4 stage: per-client PoW nonce race, winner argmin, and the
-    hash link for the new block header. Returns ``(mine_metrics, new_hash)``."""
+def make_mine(spec: RoundSpec, axis_name=None, n_shards: int = 1):
+    """Steps 3+4 stage factory: the PoW race and the hash link.
+
+    Returns ``mine(prev_hash, digest, round_idx) -> (mine_metrics,
+    new_hash)``. Every client searches its own salted nonce space over the
+    calibrated attempt budget (eq. 1 accounting); the winner is the argmin
+    hash across the client axis — the decentralized "first to find" — and
+    the winner's nonce seals the new block header onto ``prev_hash``.
+
+    Sharded, each shard races only its local client block (ids offset by
+    the shard index so the global salt assignment is unchanged), then the
+    per-client best hashes/nonces — uint32, so gather order cannot perturb
+    them — are all-gathered for the replicated argmin."""
+    n_local = spec.n_clients // n_shards
 
     def mine(prev_hash, digest, round_idx):
-        client_ids = jnp.arange(spec.n_clients, dtype=jnp.uint32)
+        client_ids = jnp.arange(n_local, dtype=jnp.uint32)
+        if axis_name is not None:
+            shard = aggregation.client_shard_index(axis_name).astype(jnp.uint32)
+            client_ids = client_ids + shard * jnp.uint32(n_local)
         search = jax.vmap(
             lambda cid: mining.pow_search(
                 prev_hash, digest, cid, spec.mine_attempts,
                 nonce_offset=round_idx.astype(jnp.uint32) * jnp.uint32(1 << 20)))
         best_h, best_n = search(client_ids)
+        best_h = aggregation.client_all_gather(best_h, axis_name)
+        best_n = aggregation.client_all_gather(best_n, axis_name)
         winner = mining.winner_of(best_h)
         solved = best_h[winner] <= mining.difficulty_threshold(spec.difficulty_bits)
         new_hash = mining.mix_hash(prev_hash, digest, best_n[winner])
@@ -259,27 +371,46 @@ def make_mine(spec: RoundSpec):
     return mine
 
 
-def make_finalize(loss_fn: LossFn, spec: RoundSpec):
-    """Closing stage: strided global-loss eval + the next ``RoundState``.
+def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None):
+    """Closing stage factory: strided global-loss eval + the next carry.
 
-    With ``eval_every == 1`` the eval is unconditional — the exact
-    pre-stride computation. Otherwise a ``lax.cond`` skips the eval vmap on
-    non-eval rounds and reports NaN, keeping the metrics pytree static for
-    ``lax.scan``."""
+    Returns ``finalize(state, params, key, new_hash, batch, metrics) ->
+    (RoundState, metrics)``. The global loss is the mean over clients of
+    each post-mix model's loss on its own shard, NaN-masked by the
+    ``eval_every`` stride: with ``eval_every == 1`` the eval is
+    unconditional — the exact pre-stride computation, no cond in the jaxpr
+    — otherwise a ``lax.cond`` skips the eval vmap on rounds where
+    ``(round_idx + 1) % eval_every != 0`` and reports a NaN row, keeping
+    the metrics pytree static for ``lax.scan`` (the history layout stays
+    ``[K]``; downstream consumers take the last *finite* entry).
 
-    def eval_loss(params, batch):
+    The stage emits the PER-CLIENT eval vector ``[C]`` (sharded: local
+    blocks all-gathered, so every engine sees the identical vector); the
+    drivers reduce it to the scalar ``history[k]["global_loss"]`` with the
+    same host-side ``np.mean``. The final mean deliberately does NOT run on
+    device: a ``[C] -> scalar`` fp32 reduce is vectorized with lane-partial
+    accumulators whose association shifts with XLA fusion context, which is
+    exactly the kind of last-ulp drift the sharded engine's bit-for-bit
+    contract forbids."""
+
+    def eval_glosses(params, batch):
+        # The input barrier bounds the eval subgraph identically in the
+        # sharded and single-device programs: the per-client loss ends in a
+        # full reduce to a scalar whose XLA:CPU association would otherwise
+        # depend on what the forward pass fuses with.
+        params, batch = jax.lax.optimization_barrier((params, batch))
         glosses = jax.vmap(lambda p, b: loss_fn(p, b)[0])(params, batch)
-        return jnp.mean(glosses)
+        return aggregation.client_all_gather(glosses, axis_name)
 
     def finalize(state, params, key, new_hash, batch, metrics):
         if spec.eval_global_loss:
             if spec.eval_every <= 1:
-                metrics["global_loss"] = eval_loss(params, batch)
+                metrics["global_loss"] = eval_glosses(params, batch)
             else:
                 is_eval = (state.round_idx + 1) % spec.eval_every == 0
                 metrics["global_loss"] = jax.lax.cond(
-                    is_eval, lambda: eval_loss(params, batch),
-                    lambda: jnp.full((), jnp.nan, jnp.float32))
+                    is_eval, lambda: eval_glosses(params, batch),
+                    lambda: jnp.full((spec.n_clients,), jnp.nan, jnp.float32))
         new_state = RoundState(params=params, key=key,
                                round_idx=state.round_idx + 1,
                                prev_hash=new_hash)
@@ -288,17 +419,24 @@ def make_finalize(loss_fn: LossFn, spec: RoundSpec):
     return finalize
 
 
-def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
+def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
+                          n_shards: int = 1):
     """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
 
     ``batch`` leaves have leading client axis [C, local_batch, ...]. The
     round is the composition of the five stage factories above; swap a stage
-    to express a new scenario."""
-    local_train = make_local_train(loss_fn, spec)
-    perturb = make_perturb(spec)
-    communicate = make_communicate(spec)
-    mine = make_mine(spec)
-    finalize = make_finalize(loss_fn, spec)
+    to express a new scenario.
+
+    With ``axis_name`` set (a mesh axis name or tuple of names) the round
+    body is written for ``shard_map``: the leading axis of params/batch is
+    this shard's ``C / n_shards`` client block and cross-client steps use
+    collectives (see each stage factory). ``axis_name=None`` is the exact
+    single-device computation."""
+    local_train = make_local_train(loss_fn, spec, n_shards)
+    perturb = make_perturb(spec, axis_name, n_shards)
+    communicate = make_communicate(spec, axis_name, n_shards)
+    mine = make_mine(spec, axis_name, n_shards)
+    finalize = make_finalize(loss_fn, spec, axis_name)
 
     def round_fn(state: RoundState, batch) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
         key, k_lazy, k_dp = jax.random.split(state.key, 3)
@@ -306,11 +444,13 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec):
             if spec.topology.stochastic else None
 
         params, local_losses = local_train(state.params, batch)
-        params = perturb(params, k_lazy, k_dp)
+        params, broadcast_full = perturb(params, k_lazy, k_dp)
         params, digest, divergence, extra = communicate(
-            params, state.params, k_topo, state.round_idx)
+            params, state.params, k_topo, state.round_idx,
+            full=broadcast_full)
         mine_metrics, new_hash = mine(state.prev_hash, digest, state.round_idx)
 
+        local_losses = aggregation.client_all_gather(local_losses, axis_name)
         metrics = {"local_loss_mean": jnp.mean(local_losses), **mine_metrics,
                    "digest": digest, "divergence": divergence, **extra}
         return finalize(state, params, key, new_hash, batch, metrics)
@@ -332,9 +472,19 @@ TRACE_COUNTS: Dict[str, int] = {"scan_runner": 0}
 # LRU eviction frees them.
 @functools.lru_cache(maxsize=16)
 def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
-                 stacked: bool):
-    """Build (and cache) the jitted K-round runner for this config."""
-    round_fn = make_integrated_round(loss_fn, spec)
+                 stacked: bool, mesh: Optional[Mesh] = None,
+                 plan: Optional["plans_lib.ScanCarryPlan"] = None):
+    """Build (and cache) the jitted K-round runner for this config.
+
+    With ``mesh``/``plan`` the whole scan runs inside ``shard_map``: the
+    carry enters with the plan's layout (params client-sharded, ledger
+    link/key/counter replicated), stays sharded across all K rounds, and
+    the stacked metrics come out replicated — XLA never reshards the
+    donated carry between rounds."""
+    axis_name = plan.client_axes if mesh is not None else None
+    n_shards = plan.n_shards if mesh is not None else 1
+    round_fn = make_integrated_round(loss_fn, spec, axis_name=axis_name,
+                                     n_shards=n_shards)
 
     def run(state: RoundState, batch):
         TRACE_COUNTS["scan_runner"] += 1
@@ -342,6 +492,16 @@ def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
             return jax.lax.scan(round_fn, state, batch)
         return jax.lax.scan(lambda s, _: round_fn(s, batch), state, None,
                             length=n_rounds)
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+
+        state_specs = RoundState(params=plan.client_spec(), key=P(),
+                                 round_idx=P(), prev_hash=P())
+        run = shard_map(run, mesh=mesh,
+                        in_specs=(state_specs, plan.batch_spec(stacked)),
+                        out_specs=(state_specs, P()),
+                        check_rep=False)
 
     # Donate the carry so params never hold two live copies on accelerator
     # backends; CPU has no donation support and would only warn.
@@ -360,7 +520,9 @@ def _round_runner(loss_fn: LossFn, spec: RoundSpec):
 def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
                       key, n_rounds: int,
                       ledger: Optional[chain.Ledger] = None,
-                      stacked: bool = False):
+                      stacked: bool = False,
+                      mesh: Optional[Mesh] = None,
+                      plan: Optional["plans_lib.ScanCarryPlan"] = None):
     """Compiled driver: all K integrated rounds in one ``jax.jit(lax.scan)``.
 
     ``batch`` is a static pytree: one ``[C, ...]`` batch reused every round,
@@ -370,6 +532,12 @@ def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
     only host transfer. Returns the same ``(state, history, ledger)`` triple
     as the Python-loop path, with the ledger rebuilt and re-validated by
     ``chain.ledger_from_scan``.
+
+    Pass ``mesh`` (and optionally a ``sharding.plans.scan_carry_plan``) to
+    run the scan client-sharded: the carry is laid out per the plan, the
+    whole K-round horizon executes inside ``shard_map``, and the results —
+    params, metrics, ledger hash links — are bit-for-bit those of the
+    single-device scan (see module docstring).
     """
     if callable(batch):
         raise TypeError(
@@ -381,12 +549,21 @@ def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
             raise ValueError(
                 f"stacked batch leading dims {sorted(leads)} != "
                 f"n_rounds={int(n_rounds)}; scan takes its length from xs")
-    runner = _scan_runner(loss_fn, spec, int(n_rounds), bool(stacked))
+    if mesh is not None and plan is None:
+        plan = plans_lib.scan_carry_plan(mesh, spec.n_clients)
+    runner = _scan_runner(loss_fn, spec, int(n_rounds), bool(stacked),
+                          mesh, plan)
     state = init_state(params_single, key, spec.n_clients)
     state, stacked_metrics = runner(state, batch)
     host = jax.device_get(stacked_metrics)   # the one host transfer
+    # the engine emits per-client eval losses [K, C]; the scalar
+    # global_loss is reduced here on host (see make_finalize)
+    glosses = host.pop("global_loss", None)
     history = [{name: float(v[k]) for name, v in host.items()}
                for k in range(int(n_rounds))]
+    if glosses is not None:
+        for k in range(int(n_rounds)):
+            history[k]["global_loss"] = float(np.mean(glosses[k]))
     ledger = chain.ledger_from_scan(
         host["digest"], host["winner"], host["nonce"], host["pow_hash"],
         ledger=ledger)
@@ -395,16 +572,26 @@ def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
 
 def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
                  key, n_rounds: int, ledger: Optional[chain.Ledger] = None,
-                 jit: bool = True, stacked: bool = False):
+                 jit: bool = True, stacked: bool = False,
+                 mesh: Optional[Mesh] = None,
+                 plan: Optional["plans_lib.ScanCarryPlan"] = None):
     """Run K integrated rounds; returns (final RoundState, history, ledger).
 
     Dispatches to the compiled scan engine when ``batches`` is a static
     pytree (see module docstring); falls back to the per-round Python loop
-    for callables (``batches(k) -> batch``) or ``jit=False``.
+    for callables (``batches(k) -> batch``) or ``jit=False``. ``mesh`` (+
+    optional ``plan``) selects the client-sharded scan engine and therefore
+    requires the static-batch path.
     """
     if jit and not callable(batches):
         return run_blade_fl_scan(loss_fn, spec, params_single, batches, key,
-                                 n_rounds, ledger=ledger, stacked=stacked)
+                                 n_rounds, ledger=ledger, stacked=stacked,
+                                 mesh=mesh, plan=plan)
+    if mesh is not None:
+        raise ValueError(
+            "mesh-sharded execution needs the compiled scan engine: pass a "
+            "static batch pytree and jit=True (per-round batch callables "
+            "would reshard the carry every round)")
     round_fn = _round_runner(loss_fn, spec) if jit \
         else make_integrated_round(loss_fn, spec)
     state = init_state(params_single, key, spec.n_clients)
@@ -423,5 +610,11 @@ def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
             model_digest=int(metrics["digest"]), winner=int(metrics["winner"]),
             nonce=int(metrics["nonce"]), pow_hash=int(metrics["pow_hash"]))
         ledger.append(block)
-        history.append({k2: float(v) for k2, v in metrics.items()})
+        metrics = dict(metrics)
+        glosses = metrics.pop("global_loss", None)
+        entry = {k2: float(v) for k2, v in metrics.items()}
+        if glosses is not None:
+            # identical host-side reduction to the scan driver's
+            entry["global_loss"] = float(np.mean(np.asarray(glosses)))
+        history.append(entry)
     return state, history, ledger

@@ -23,22 +23,70 @@ loop see identical matrices round for round.
 dispatches it straight to ``aggregation.fedavg`` so the default behaviour is
 bit-for-bit identical to the pre-topology engine (a matmul by ``11^T / C``
 would only be float-close).
+
+Mesh lowering hook
+------------------
+
+Besides its matrix, every topology advertises HOW its mix should execute on
+a client-sharded device mesh: :meth:`Topology.lowering` returns a
+:class:`MixLowering` tag the engine's communicate stage dispatches on —
+``all_reduce`` (FullMesh: one weighted all-reduce over the client axis),
+``neighbor_permute`` (Ring: halo ``collective_permute``s, O(window)
+communication independent of C), or ``gather`` (any W: masked all-gather
+fallback). The lowered paths live in ``core/aggregation`` and reproduce
+their dense twins bit for bit — see that module's docstring for why the
+fp32 association is pinned.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# MixLowering kinds (module constants so the engine can dispatch without
+# string literals scattered around).
+ALL_REDUCE = "all_reduce"
+NEIGHBOR_PERMUTE = "neighbor_permute"
+GATHER = "gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class MixLowering:
+    """How a topology's mix executes on a client-sharded mesh.
+
+    ``kind`` is one of :data:`ALL_REDUCE`, :data:`NEIGHBOR_PERMUTE`,
+    :data:`GATHER`. ``offsets``/``weight`` are only populated for
+    ``neighbor_permute``: client ``i`` adopts
+    ``weight * sum_off model[(i + off) % C]``, accumulated in the fixed
+    ``offsets`` order (the order is part of the contract — it pins the fp32
+    association so dense and sharded execution agree bitwise).
+
+    >>> Ring(neighbors=1).lowering(8).kind
+    'neighbor_permute'
+    >>> Ring(neighbors=1).lowering(8).offsets
+    (-1, 0, 1)
+    >>> FullMesh().lowering(8).kind
+    'all_reduce'
+    >>> RandomGraph(p_link=0.5).lowering(8).kind
+    'gather'
+    """
+    kind: str
+    offsets: Tuple[int, ...] = ()
+    weight: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """Base topology = full mesh. Subclasses override :meth:`matrix`.
 
-    ``matrix`` returns a float32 row-stochastic ``[C, C]`` array: entry
-    ``W[i, j]`` is the weight client i puts on client j's broadcast model.
+    The contract: :meth:`matrix` returns a float32 row-stochastic ``[C, C]``
+    array — every entry ``W[i, j] >= 0`` and every row sums to 1 — where
+    ``W[i, j]`` is the weight client i puts on client j's broadcast model
+    (``aggregation.mix``; row-stochasticity is what keeps the mix a convex
+    combination, so a consensus state is a fixed point for every topology).
     ``key``/``round_idx`` are only consulted when :attr:`stochastic` is True;
     both may be traced values (the engine calls this inside ``lax.scan``).
     """
@@ -55,10 +103,22 @@ class Topology:
     def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
         raise NotImplementedError
 
+    def lowering(self, n_clients: int) -> MixLowering:
+        """The mesh execution strategy for this topology's mix (see module
+        docstring). Default: the masked all-gather fallback, correct for any
+        row-stochastic ``W``."""
+        return MixLowering(kind=GATHER)
+
 
 @dataclasses.dataclass(frozen=True)
 class FullMesh(Topology):
-    """Paper baseline: every broadcast reaches everyone, ``W = 11^T / C``."""
+    """Paper baseline: every broadcast reaches everyone, ``W = 11^T / C``.
+
+    >>> import numpy as np
+    >>> w = np.asarray(FullMesh().matrix(4))
+    >>> bool((w == 0.25).all()) and bool(np.allclose(w.sum(axis=1), 1.0))
+    True
+    """
 
     @property
     def is_full_mesh(self) -> bool:
@@ -66,6 +126,10 @@ class FullMesh(Topology):
 
     def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
         return jnp.full((n_clients, n_clients), 1.0 / n_clients, jnp.float32)
+
+    def lowering(self, n_clients: int) -> MixLowering:
+        """One weighted all-reduce over the client axis (= ``fedavg``)."""
+        return MixLowering(kind=ALL_REDUCE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +152,18 @@ class Ring(Topology):
             for off in span:
                 w[i, (i + off) % n_clients] = 1.0
         return jnp.asarray(w / w.sum(axis=1, keepdims=True))
+
+    def lowering(self, n_clients: int) -> MixLowering:
+        """Neighbor ``collective_permute`` halo when the window is distinct
+        (``2·neighbors + 1 <= C``); otherwise the window wraps onto itself,
+        the dedup'd :meth:`matrix` is authoritative, and the gather fallback
+        applies it."""
+        window = 2 * self.neighbors + 1
+        if window > n_clients:
+            return MixLowering(kind=GATHER)
+        offsets = tuple(range(-self.neighbors, self.neighbors + 1))
+        return MixLowering(kind=NEIGHBOR_PERMUTE, offsets=offsets,
+                           weight=1.0 / window)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -42,3 +42,22 @@ def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     devices = jax.devices()
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_client_mesh(n_devices: int = 0):
+    """1-D ``('data',)`` mesh for the client-sharded scan engine.
+
+    ``n_devices == 0`` takes every visible device. On a CPU dev box, expose
+    more than one host device by setting (BEFORE any jax import / process
+    start) ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the
+    same trick the dry-run and the multi-device tests use.
+    """
+    import jax
+
+    n = n_devices or len(jax.devices())
+    if len(jax.devices()) < n:
+        raise ValueError(
+            f"asked for {n} devices but only {len(jax.devices())} visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "launch to fan a CPU out into placeholder devices")
+    return make_host_mesh((n,), ("data",))

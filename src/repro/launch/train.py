@@ -11,6 +11,13 @@ Runs real integrated rounds (training + lazy + mining + chain) either:
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch mlp --rounds 10 --k 5
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke --rounds 3
+
+Multi-device (client-sharded scan engine; the K-round carry never leaves the
+devices, and results are bit-for-bit the single-device run — see
+docs/architecture.md):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+    PYTHONPATH=src python -m repro.launch.train --arch mlp --devices 4
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import jax.numpy as jnp
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
 from repro.core import allocation, bounds, chain, rounds, topology
 from repro.data.pipeline import FLDataSource, LMDataSource
+from repro.launch.mesh import make_client_mesh
 from repro.models import registry
 from repro.models.mlp import init_mlp, mlp_loss
 from repro.training.metrics import MetricLogger
@@ -46,11 +54,13 @@ def run_mlp(args) -> dict:
                        blade.dirichlet_alpha, seed=blade.seed)
     params = init_mlp(jax.random.fold_in(key, 1))
     log = MetricLogger(args.out_dir, "blade_mlp")
+    mesh = make_client_mesh(args.devices) if args.devices else None
     t0 = time.time()
-    # static batch -> compiled scan engine (K rounds, one dispatch)
+    # static batch -> compiled scan engine (K rounds, one dispatch);
+    # --devices shards the client axis of the whole scan over the mesh
     state, hist, ledger = rounds.run_blade_fl(
         mlp_loss, spec, params, src.static_batch(), jax.random.fold_in(key, 2),
-        blade.K)
+        blade.K, mesh=mesh)
     # final eval on held-out data with the aggregated model
     from repro.core.aggregation import aggregate_once
     final = aggregate_once(state.params)
@@ -62,6 +72,7 @@ def run_mlp(args) -> dict:
         "final_eval_acc": float(metrics["accuracy"]),
         "final_global_loss": hist[-1].get("global_loss"),
         "chain_valid": ledger.validate_chain(), "blocks": len(ledger.blocks),
+        "devices": mesh.devices.size if mesh is not None else 1,
         "wall_s": time.time() - t0,
     }
     print(json.dumps(result, indent=1))
@@ -83,15 +94,18 @@ def run_arch_smoke(args) -> dict:
     def loss_fn(p, b):
         return registry.loss_fn(p, cfg, b, remat=False)
 
+    mesh = make_client_mesh(args.devices) if args.devices else None
     t0 = time.time()
-    # stacked [K, C, ...] token streams -> compiled scan engine
+    # stacked [K, C, ...] token streams -> compiled scan engine;
+    # --devices shards the client axis over the mesh, same as the mlp path
     state, hist, ledger = rounds.run_blade_fl(
         loss_fn, spec, params, src.stacked_batches(args.rounds),
-        jax.random.fold_in(key, 2), args.rounds, stacked=True)
+        jax.random.fold_in(key, 2), args.rounds, stacked=True, mesh=mesh)
     result = {
         "arch": cfg.name, "rounds": args.rounds,
         "loss_curve": [h["global_loss"] for h in hist],
         "chain_valid": ledger.validate_chain(),
+        "devices": mesh.devices.size if mesh is not None else 1,
         "wall_s": time.time() - t0,
     }
     print(json.dumps(result, indent=1))
@@ -120,6 +134,10 @@ def main():
                          "partial:n (core/topology.py)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="global-loss eval stride (NaN on skipped rounds)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the client axis of the scan engine over this "
+                         "many devices (0 = single-device; requires "
+                         "clients %% devices == 0; see docs/architecture.md)")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args()
     if args.arch == "mlp":

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.sharding.specs import ShardingPlan
@@ -33,6 +33,65 @@ _TRAIN_TABLE = {
 
 # serve: enable FSDP when TP-only params per device exceed ~12 GB
 _FSDP_SERVE_BYTES = 12e9
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanCarryPlan:
+    """Layout of the K-round scan engine's carry on a client-sharded mesh.
+
+    The L1 story applied to the WHOLE compiled horizon, not just one round:
+    the ``RoundState`` carry has its client-stacked leaves (params, and the
+    per-client batch riding along as scan xs) split along ``client_axes``,
+    while the protocol scalars every client must agree on — the PRNG key
+    each round's lazy/DP/topology streams fold from, the round counter, and
+    ``prev_hash`` (the ledger head every block header links to) — stay
+    replicated. Mining state (each client's best hash/nonce) lives inside
+    the round sharded like the clients that produced it and is only
+    gathered for the winner argmin. ``core.rounds._scan_runner`` turns this
+    into ``shard_map`` in/out specs, so the donated carry keeps this layout
+    across all K rounds without ever leaving the devices.
+
+    Frozen + hashable: the plan is part of the compiled-runner cache key.
+    """
+    n_clients: int
+    client_axes: Tuple[str, ...] = ("data",)
+    n_shards: int = 1
+
+    @property
+    def clients_per_shard(self) -> int:
+        return self.n_clients // self.n_shards
+
+    def client_spec(self) -> P:
+        """Spec prefix for client-stacked leaves ([C, ...] -> axis 0)."""
+        return P(self.client_axes)
+
+    def batch_spec(self, stacked: bool) -> P:
+        """Per-round batches are ``[C, ...]``; a ``stacked=True`` source is
+        ``[K, C, ...]`` — the scan consumes axis 0, clients sit on axis 1."""
+        return P(None, self.client_axes) if stacked else P(self.client_axes)
+
+
+def scan_carry_plan(mesh: Mesh, n_clients: int,
+                    client_axes: Tuple[str, ...] = ("data",)) -> ScanCarryPlan:
+    """Build + validate the scan-carry layout for ``mesh``.
+
+    ``n_clients`` must divide evenly over the extent of ``client_axes`` —
+    every shard carries the same static client block, which is what keeps
+    the per-shard program identical (and the sharded scan bit-for-bit with
+    the single-device one)."""
+    from repro.sharding.specs import _extent
+
+    for a in client_axes:
+        if a not in mesh.shape:
+            raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")
+    n_shards = _extent(mesh, tuple(client_axes))
+    if n_clients % n_shards != 0:
+        raise ValueError(
+            f"n_clients={n_clients} not divisible by the client-axis extent "
+            f"{n_shards} (mesh axes {client_axes}); pick C as a multiple of "
+            "the device count")
+    return ScanCarryPlan(n_clients=n_clients, client_axes=tuple(client_axes),
+                         n_shards=n_shards)
 
 
 def data_axes(multi_pod: bool) -> Tuple[str, ...]:

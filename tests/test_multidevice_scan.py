@@ -1,0 +1,145 @@
+"""K-round sharded-carry equivalence: the compiled scan engine under the L1
+client-sharded layout (shard_map over a >=4-device host mesh) reproduces the
+single-device scan BIT FOR BIT — params, every metric, and the hash-linked
+ledger — for every shipped topology. Companion to the single-round
+``test_multidevice_fl_semantics_subprocess``; this one covers the whole
+horizon, where a single reassociated fp32 reduction anywhere would snowball
+through the digest into broken hash links."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_sharded_scan_bitwise_equivalence_subprocess():
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json, math
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+
+        C, K = 8, 3
+        key = jax.random.key(0)
+        src = FLDataSource(key, C, samples_per_client=32, seed=0)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+        rk = jax.random.fold_in(key, 2)
+
+        def eqf(a, b):
+            return a == b or (isinstance(a, float)
+                              and math.isnan(a) and math.isnan(b))
+
+        cases = [
+            ("full_mesh", topology.FullMesh(),
+             dict(n_lazy=1, sigma2=0.05, dp_sigma=0.05)),
+            ("full_mesh_detect", topology.FullMesh(),
+             dict(detect_lazy=True, n_lazy=2, sigma2=0.01)),
+            ("ring1_halo", topology.Ring(neighbors=1),
+             dict(n_lazy=1, sigma2=0.05)),
+            ("ring2_halo_edge", topology.Ring(neighbors=2), {}),
+            ("random_graph_stride", topology.RandomGraph(p_link=0.6),
+             dict(eval_every=2)),
+            ("partial", topology.PartialParticipation(n_active=3), {}),
+        ]
+        out = {}
+        for name, topo, extra in cases:
+            spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1,
+                                    mine_attempts=64, difficulty_bits=2,
+                                    topology=topo, **extra)
+            batch = src.static_batch()
+            st1, h1, l1 = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, rk, K)
+            st2, h2, l2 = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, rk, K, mesh=mesh)
+            out[name] = {
+                "params_bitwise": all(
+                    bool((np.asarray(a) == np.asarray(b)).all())
+                    for a, b in zip(jax.tree.leaves(st1.params),
+                                    jax.tree.leaves(st2.params))),
+                "history_bitwise": all(
+                    eqf(a[k], b[k]) for a, b in zip(h1, h2) for k in a),
+                "ledger_bitwise": [b.header_hash for b in l1.blocks]
+                    == [b.header_hash for b in l2.blocks],
+                "chain_valid": l2.validate_chain(),
+                "n_blocks": len(l2.blocks),
+            }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for name, r in res.items():
+        assert r["params_bitwise"], (name, r)
+        assert r["history_bitwise"], (name, r)
+        assert r["ledger_bitwise"], (name, r)
+        assert r["chain_valid"] and r["n_blocks"] == 3, (name, r)
+
+
+@pytest.mark.slow
+def test_sharded_scan_stacked_batches_subprocess():
+    """The [K, C, ...] stacked-xs path (per-round data) also holds the
+    bitwise contract under the sharded carry, and the donated carry accepts
+    a plan with a validated client-axis extent."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+        from repro.sharding import plans
+
+        C, K = 8, 3
+        key = jax.random.key(3)
+        src = FLDataSource(key, C, samples_per_client=32, seed=3)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+        plan = plans.scan_carry_plan(mesh, C)
+        stacked = jax.tree.map(
+            lambda *xs: np.stack(xs), *[src.round_batch(k) for k in range(K)])
+        spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1, n_lazy=1,
+                                sigma2=0.02, mine_attempts=64,
+                                difficulty_bits=2,
+                                topology=topology.Ring(neighbors=1))
+        rk = jax.random.fold_in(key, 2)
+        st1, h1, l1 = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, stacked, rk, K, stacked=True)
+        st2, h2, l2 = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, stacked, rk, K, stacked=True,
+            mesh=mesh, plan=plan)
+        print(json.dumps({
+            "plan_shards": plan.n_shards,
+            "params_bitwise": all(
+                bool((np.asarray(a) == np.asarray(b)).all())
+                for a, b in zip(jax.tree.leaves(st1.params),
+                                jax.tree.leaves(st2.params))),
+            "history_bitwise": h1 == h2,
+            "ledger_bitwise": [b.header_hash for b in l1.blocks]
+                == [b.header_hash for b in l2.blocks],
+        }))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {"plan_shards": 4, "params_bitwise": True,
+                   "history_bitwise": True, "ledger_bitwise": True}

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs link checker (CI docs lane).
+
+Scans README.md and docs/*.md for markdown links and inline code paths:
+
+  * relative links must resolve to an existing file/dir (anchors stripped);
+  * bare `path/to/file.py` references in backticks must exist too, so the
+    architecture/paper-map tables can't silently rot as modules move;
+  * external http(s) links are skipped (checking them needs network).
+
+Exit code 1 with a per-file report when anything dangles.
+
+  python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `src/...py` / `tests/...py` / `benchmarks/...py` / `docs/...md` style
+# backtick references; a trailing path component is enough to check.
+CODE_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|docs|examples|tools)/[\w./-]+\.(?:py|md|yml))`")
+
+
+def doc_files():
+    yield os.path.join(ROOT, "README.md")
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                yield os.path.join(docs, name)
+
+
+def check_file(path: str) -> list[str]:
+    base = os.path.dirname(path)
+    text = open(path, encoding="utf-8").read()
+    errors = []
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://")):
+            continue  # external: existence needs network, skip in CI
+        if target.startswith(("#", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            errors.append(f"dangling link: {target}")
+    for target in set(CODE_PATH.findall(text)):
+        if not os.path.exists(os.path.join(ROOT, target)):
+            errors.append(f"dangling code path: {target}")
+    return errors
+
+
+def main() -> int:
+    failed = False
+    for path in doc_files():
+        errors = check_file(path)
+        rel = os.path.relpath(path, ROOT)
+        if errors:
+            failed = True
+            print(f"{rel}: {len(errors)} problem(s)")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"{rel}: ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
