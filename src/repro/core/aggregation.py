@@ -264,6 +264,56 @@ def mix_neighbor_halo(params, offsets: Sequence[int], weight: float,
     return jax.tree.map(one, params)
 
 
+def mix_shift_halo(params, offsets: Sequence[int], weight: float,
+                   axis_name: AxisName):
+    """Arbitrary-shift generalization of :func:`mix_neighbor_halo`.
+
+    Client ``i`` adopts ``weight * sum_off params[(i + off) % C]`` for any
+    static offsets — not just offsets inside one neighbor block. Each offset
+    ``s`` decomposes as ``s = q * L + m`` over the per-shard block size
+    ``L``: the rows client ``i`` needs live in the blocks of devices
+    ``d + q`` and ``d + q + 1``, so the lowering is (at most) two
+    whole-block ``ppermute``s plus a static slice per offset — O(1) blocks
+    moved per offset, independent of C, which is what lets a gossip
+    *rotation* keep its one-partner communication volume on the mesh.
+
+    Bitwise contract: pure data movement plus the same fixed-order
+    raw-sum-then-scale accumulation as :func:`mix_rolls`, so the sharded
+    result equals the dense roll form bit for bit. Requires a single mesh
+    axis; with ``axis_name=None`` it IS :func:`mix_rolls`.
+    """
+    if axis_name is None:
+        return mix_rolls(params, offsets, weight)
+    (name,) = _axis_tuple(axis_name)
+    n_dev = jax.lax.psum(1, name)
+    w = jnp.float32(weight)
+
+    def block_from(x, q):
+        q = q % n_dev
+        if q == 0:
+            return x
+        # dest d receives the block of source (d + q) % D
+        perm = [(j, (j - q) % n_dev) for j in range(n_dev)]
+        return jax.lax.ppermute(x, name, perm)
+
+    def rows_at(x, s):
+        local = x.shape[0]
+        q, m = divmod(s % (local * n_dev), local)
+        if m == 0:
+            return block_from(x, q)
+        ext = jnp.concatenate([block_from(x, q), block_from(x, q + 1)], axis=0)
+        return jax.lax.slice_in_dim(ext, m, m + local, axis=0)
+
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        acc = rows_at(x, offsets[0])
+        for off in offsets[1:]:
+            acc = acc + rows_at(x, off)
+        return (acc * w).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
 def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
                *, axis_name: AxisName = None, n_shards: int = 1, full=None):
     """General/sparse-``W`` fallback: masked gather pattern.

@@ -102,25 +102,73 @@ def k_star_numeric(p: BoundParams, *, k_max: Optional[int] = None,
     return best_k
 
 
+def _finite_runs(vs):
+    """Maximal contiguous runs of finite values (each a list)."""
+    runs, cur = [], []
+    for v in vs:
+        if math.isfinite(v):
+            cur.append(v)
+        elif cur:
+            runs.append(cur)
+            cur = []
+    if cur:
+        runs.append(cur)
+    return runs
+
+
 def is_convex_in_k(p: BoundParams, *, k_max: Optional[int] = None, **lazy) -> bool:
-    """Empirical convexity check of G(K) on the feasible grid (Theorem 2)."""
+    """Empirical convexity check of G(K) on the feasible grid (Theorem 2).
+
+    Vacuous bounds (``G = +inf`` where ``g <= 0``) punch holes in the grid;
+    a second difference is only meaningful between ADJACENT feasible Ks, so
+    convexity is checked per contiguous finite window. (Filtering the
+    non-finite values out first and diffing the concatenation — the old
+    behavior — compares Ks across a vacuous gap and mis-reports convexity
+    near the feasibility boundary.)"""
     if k_max is None:
         k_max = int(p.t_sum / (p.alpha + p.beta))
     ks = [k for k in range(1, max(k_max, 3) + 1) if gamma(p, k) / k >= 1.0]
     vs = [loss_bound(p, k, **lazy) for k in ks]
-    vs = [v for v in vs if math.isfinite(v)]
-    if len(vs) < 3:
-        return True
-    d2 = np.diff(vs, 2)
-    return bool(np.all(d2 >= -1e-9 * np.maximum(1.0, np.abs(vs[1:-1]))))
+    for run in _finite_runs(vs):
+        if len(run) < 3:
+            continue
+        d2 = np.diff(run, 2)
+        if not np.all(d2 >= -1e-9 * np.maximum(1.0, np.abs(run[1:-1]))):
+            return False
+    return True
 
 
 def estimate_constants(loss_curve, grad_norms=None) -> dict:
     """Crude empirical (L, xi, delta) estimates from observed training — used
-    by benchmarks to instantiate the bound against experiments (§7)."""
+    by benchmarks to instantiate the bound against experiments (§7).
+
+    With ``grad_norms`` (per-round gradient-norm observations ``g_t``) the
+    estimates use the gradients directly: ``xi`` — the Lipschitz constant of
+    F, i.e. a gradient-norm bound — is ``max_t g_t``, and smoothness L comes
+    from gradient increments along the GD path: one step moves the iterate
+    by ``eta * g_t`` and the loss by ``|Delta l_t| ~= eta * g_t^2``, so
+    ``|Delta g_t| <= L * eta * g_t`` gives ``L >= |Delta g_t| * g_t /
+    |Delta l_t|`` with the unknown ``eta`` cancelling. Without
+    ``grad_norms`` (or with a degenerate curve) it falls back to the
+    loss-curve heuristic."""
     losses = np.asarray(loss_curve, dtype=np.float64)
     dl = np.abs(np.diff(losses))
-    xi = float(np.max(dl)) if dl.size else 1.0
-    L = 2.0 * xi
     delta = float(np.std(losses)) if losses.size > 1 else 0.1
+    g = (np.asarray(grad_norms, dtype=np.float64).ravel()
+         if grad_norms is not None else np.zeros(0))
+    if g.size >= 2:
+        xi = float(np.max(np.abs(g)))
+        dg = np.abs(np.diff(g))
+        n = min(dg.size, dl.size)
+        # only form the ratio on rounds where the loss actually moved —
+        # a plateau round (dl ~ 0) with a nonzero gradient change would
+        # otherwise explode the max
+        scale = float(np.max(np.abs(losses))) if losses.size else 1.0
+        moved = dl[:n] > 1e-9 * max(1.0, scale)
+        ratios = dg[:n][moved] * np.abs(g[:n][moved]) / dl[:n][moved]
+        ratios = ratios[np.isfinite(ratios) & (ratios > 0)]
+        L = float(np.max(ratios)) if ratios.size else 2.0 * xi
+    else:
+        xi = float(np.max(dl)) if dl.size else 1.0
+        L = 2.0 * xi
     return {"L": max(L, 1e-3), "xi": max(xi, 1e-3), "delta": max(delta, 1e-3)}

@@ -66,12 +66,20 @@ of arXiv:2012.02044 / arXiv:2406.00752. Both driver paths derive the
 per-round graph from the same fold of the carried PRNG key, so scan and
 Python loop stay exactly equivalent for every topology.
 
+Time-varying ``Schedule`` topologies (gossip rotations, epoch-alternating
+overlays, SNR link-quality fading) compile into the same single scan with
+no retrace across K — see ``make_communicate`` for the three dispatch
+strategies — and ``RoundSpec.data_weights`` threads |D_i| row reweighting
+into every dense mix. ``core/spectral.py`` turns any topology/schedule
+into its consensus-rate diagnostic (1 - |lambda_2(W)|, ergodic gap).
+
 ``RoundSpec.eval_every`` strides the in-scan global-loss eval: rounds where
 ``(round_idx + 1) % eval_every != 0`` skip the eval vmap via ``lax.cond``
 and report NaN, so the history keeps a static ``[K]`` layout. The default
 ``eval_every=1`` keeps the exact pre-stride computation (no cond in the
-jaxpr). Choose K divisible by ``eval_every`` when you need
-``history[-1]["global_loss"]`` finite.
+jaxpr). Both drivers force an eval on the LAST round even when
+``K % eval_every != 0``, so ``history[-1]["global_loss"]`` is always
+finite and best-K selection never compares against NaN.
 
 Client-sharded execution (mesh + plan)
 --------------------------------------
@@ -133,7 +141,13 @@ class RoundSpec:
     eval_every: int = 1
     # Steps 2+5 communication pattern (core/topology.py). FullMesh is the
     # paper baseline and dispatches to aggregation.fedavg bit-for-bit.
+    # Schedules (time-varying topologies) are topologies too — the
+    # communicate stage compiles their period into the scan.
     topology: topology_lib.Topology = topology_lib.FullMesh()
+    # |D_i| data sizes (length n_clients); reweight each mix row as
+    # W'[i, j] ∝ W[i, j] * data_weights[j] (aggregation.mix weights). A
+    # tuple so the spec stays hashable; None = unweighted (paper baseline).
+    data_weights: Optional[Tuple[float, ...]] = None
     # beyond-paper (§8 future work): flag near-duplicate broadcast models
     # before aggregation (core/detection.py); adds n_suspects to metrics.
     detect_lazy: bool = False
@@ -188,6 +202,21 @@ def _microbatched_grad(loss_fn: LossFn, n_mb: int):
 # stochastic topologies that leaves the lazy/DP streams (and therefore the
 # FullMesh baseline results) untouched.
 _TOPOLOGY_SALT = 0x746F706F  # "topo"
+
+
+def topology_keys(key, n_rounds: int):
+    """Host-side replica of the engine's per-round topology PRNG stream.
+
+    Returns the list of ``k_topo`` keys rounds ``0..n_rounds-1`` fold their
+    stochastic graphs from, given the run key passed to the drivers — the
+    same split chain the round body performs, so diagnostics
+    (``core/spectral.py``) can reconstruct the EXACT per-round mixing
+    matrices a stochastic topology/schedule used in a run."""
+    out = []
+    for _ in range(int(n_rounds)):
+        key, _k_lazy, k_dp = jax.random.split(key, 3)
+        out.append(jax.random.fold_in(k_dp, _TOPOLOGY_SALT))
+    return out
 
 
 def make_local_train(loss_fn: LossFn, spec: RoundSpec, n_shards: int = 1):
@@ -286,18 +315,66 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     that same gathered tree, so diagnostics add no extra collective. When
     the perturb stage already gathered the broadcast set, its ``full`` tree
     is accepted (re-barriered, so the digest reduce stays fusion-pinned)
-    instead of gathering twice."""
+    instead of gathering twice.
+
+    Schedules compile into the traced body with no retrace across K: a
+    deterministic schedule's matrices become a static ``[P, C, C]`` table
+    indexed by the traced round counter; a :class:`GossipRotation`'s
+    round-dependent offsets become a ``lax.switch`` over P static permute
+    branches (``mix_shift_halo`` on a single mesh axis, rolls otherwise);
+    stochastic schedules draw their phase graph from ``k_topo`` like
+    ``RandomGraph``. ``spec.data_weights`` (|D_i| row reweighting) rides the
+    dense-matrix paths — permute lowerings bake uniform window weights, so a
+    weighted spec routes ``neighbor_permute`` topologies through their
+    matrices instead."""
     topo = spec.topology
     low = topo.lowering(spec.n_clients)
     n_local = spec.n_clients // n_shards
-    # halo needs the window inside one neighbor block and a single mesh axis
-    halo_ok = (low.kind == topology_lib.NEIGHBOR_PERMUTE
-               and (axis_name is None or isinstance(axis_name, str)
-                    or len(axis_name) == 1)
-               and low.offsets and -min(low.offsets) <= n_local
-               and max(low.offsets) <= n_local)
+    single_axis = (axis_name is None or isinstance(axis_name, str)
+                   or len(axis_name) == 1)
     halo_axis = (axis_name if isinstance(axis_name, (str, type(None)))
                  else axis_name[0])
+    if spec.data_weights is not None and \
+            len(spec.data_weights) != spec.n_clients:
+        raise ValueError(
+            f"data_weights has {len(spec.data_weights)} entries, expected "
+            f"n_clients={spec.n_clients}")
+    weights = (jnp.asarray(spec.data_weights, jnp.float32)
+               if spec.data_weights is not None else None)
+    kind = low.kind
+    # |D_i| weights reshape each row of W; the permute lowerings hard-code
+    # uniform window weights, so weighted mixes go through the dense matrix.
+    if weights is not None and kind == topology_lib.NEIGHBOR_PERMUTE:
+        kind = topology_lib.GATHER
+    rot_offsets = (low.offsets_table
+                   if kind == topology_lib.NEIGHBOR_PERMUTE else ())
+    # halo needs the window inside one neighbor block and a single mesh axis
+    halo_ok = (kind == topology_lib.NEIGHBOR_PERMUTE and single_axis
+               and low.offsets and -min(low.offsets) <= n_local
+               and max(low.offsets) <= n_local)
+    is_schedule = isinstance(topo, topology_lib.Schedule)
+    period = topo.period(spec.n_clients) if is_schedule else 1
+    # Schedules on the gather path need no special casing here:
+    # Schedule.matrix already compiles a deterministic schedule to a static
+    # [P, C, C] table indexed by the traced round counter (and a stochastic
+    # one to a switch over keyed draws), so the generic topo.matrix call
+    # below traces to exactly that.
+
+    def mix_scheduled_shifts(params, full, phase):
+        """Rotation dispatch: lax.switch over one static branch per phase."""
+        if axis_name is None:
+            return jax.lax.switch(
+                phase, [lambda p, o=o: aggregation.mix_rolls(p, o, low.weight)
+                        for o in rot_offsets], params)
+        if single_axis:
+            return jax.lax.switch(
+                phase, [lambda p, o=o: aggregation.mix_shift_halo(
+                    p, o, low.weight, halo_axis) for o in rot_offsets],
+                params)
+        mixed = jax.lax.switch(
+            phase, [lambda f, o=o: aggregation.mix_rolls(f, o, low.weight)
+                    for o in rot_offsets], full)
+        return aggregation.client_local_rows(mixed, axis_name, n_shards)
 
     def communicate(params, prev_params, k_topo, round_idx, full=None):
         if full is None:
@@ -312,18 +389,27 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
                 full, prev_full, threshold_frac=spec.detect_threshold)
             extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
         divergence = aggregation.client_divergence(full)
-        if low.kind == topology_lib.ALL_REDUCE:
-            params = aggregation.mix_all_reduce(params, axis_name=axis_name,
+        if kind == topology_lib.ALL_REDUCE:
+            params = aggregation.mix_all_reduce(params, weights,
+                                                axis_name=axis_name,
                                                 n_shards=n_shards, full=full)
+        elif rot_offsets:
+            phase = jnp.mod(jnp.asarray(round_idx, jnp.int32), period)
+            params = mix_scheduled_shifts(params, full, phase)
         elif halo_ok:
             params = aggregation.mix_neighbor_halo(params, low.offsets,
                                                    low.weight, halo_axis)
-        elif low.kind == topology_lib.NEIGHBOR_PERMUTE:
+        elif kind == topology_lib.NEIGHBOR_PERMUTE and single_axis \
+                and axis_name is not None:
+            params = aggregation.mix_shift_halo(params, low.offsets,
+                                                low.weight, halo_axis)
+        elif kind == topology_lib.NEIGHBOR_PERMUTE:
             mixed = aggregation.mix_rolls(full, low.offsets, low.weight)
             params = aggregation.client_local_rows(mixed, axis_name, n_shards)
         else:
             w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
-            params = aggregation.mix_gather(params, w, axis_name=axis_name,
+            params = aggregation.mix_gather(params, w, weights,
+                                            axis_name=axis_name,
                                             n_shards=n_shards, full=full)
         return params, digest, divergence, extra
 
@@ -371,7 +457,8 @@ def make_mine(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     return mine
 
 
-def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None):
+def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
+                  n_rounds: Optional[int] = None):
     """Closing stage factory: strided global-loss eval + the next carry.
 
     Returns ``finalize(state, params, key, new_hash, batch, metrics) ->
@@ -383,6 +470,12 @@ def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None):
     ``(round_idx + 1) % eval_every != 0`` and reports a NaN row, keeping
     the metrics pytree static for ``lax.scan`` (the history layout stays
     ``[K]``; downstream consumers take the last *finite* entry).
+
+    ``n_rounds`` (the horizon, when the driver knows it) forces an eval on
+    the LAST round even when ``K % eval_every != 0`` — otherwise the run
+    would end on a NaN ``global_loss`` and poison every downstream
+    best-K/`final_loss` consumer (the sweep_k / bench_topology selection
+    bug this closes).
 
     The stage emits the PER-CLIENT eval vector ``[C]`` (sharded: local
     blocks all-gathered, so every engine sees the identical vector); the
@@ -408,6 +501,9 @@ def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None):
                 metrics["global_loss"] = eval_glosses(params, batch)
             else:
                 is_eval = (state.round_idx + 1) % spec.eval_every == 0
+                if n_rounds is not None:
+                    is_eval = jnp.logical_or(
+                        is_eval, state.round_idx + 1 == n_rounds)
                 metrics["global_loss"] = jax.lax.cond(
                     is_eval, lambda: eval_glosses(params, batch),
                     lambda: jnp.full((spec.n_clients,), jnp.nan, jnp.float32))
@@ -420,7 +516,8 @@ def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None):
 
 
 def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
-                          n_shards: int = 1):
+                          n_shards: int = 1,
+                          n_rounds: Optional[int] = None):
     """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
 
     ``batch`` leaves have leading client axis [C, local_batch, ...]. The
@@ -431,12 +528,14 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
     body is written for ``shard_map``: the leading axis of params/batch is
     this shard's ``C / n_shards`` client block and cross-client steps use
     collectives (see each stage factory). ``axis_name=None`` is the exact
-    single-device computation."""
+    single-device computation. ``n_rounds`` (when the driver knows the
+    horizon) lets the finalize stage force a global-loss eval on the last
+    round regardless of the ``eval_every`` stride."""
     local_train = make_local_train(loss_fn, spec, n_shards)
     perturb = make_perturb(spec, axis_name, n_shards)
     communicate = make_communicate(spec, axis_name, n_shards)
     mine = make_mine(spec, axis_name, n_shards)
-    finalize = make_finalize(loss_fn, spec, axis_name)
+    finalize = make_finalize(loss_fn, spec, axis_name, n_rounds)
 
     def round_fn(state: RoundState, batch) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
         key, k_lazy, k_dp = jax.random.split(state.key, 3)
@@ -484,7 +583,7 @@ def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
     axis_name = plan.client_axes if mesh is not None else None
     n_shards = plan.n_shards if mesh is not None else 1
     round_fn = make_integrated_round(loss_fn, spec, axis_name=axis_name,
-                                     n_shards=n_shards)
+                                     n_shards=n_shards, n_rounds=n_rounds)
 
     def run(state: RoundState, batch):
         TRACE_COUNTS["scan_runner"] += 1
@@ -510,11 +609,14 @@ def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
 
 
 @functools.lru_cache(maxsize=16)
-def _round_runner(loss_fn: LossFn, spec: RoundSpec):
+def _round_runner(loss_fn: LossFn, spec: RoundSpec,
+                  n_rounds: Optional[int] = None):
     """Cached jitted single-round step for the Python-loop path, so repeated
     ``run_blade_fl`` calls at the same config (K-sweeps, benchmarks) reuse
-    the compiled executable instead of retracing per call."""
-    return jax.jit(make_integrated_round(loss_fn, spec))
+    the compiled executable instead of retracing per call. ``n_rounds``
+    mirrors the scan runner's forced last-round eval (part of the cache key
+    only when ``eval_every > 1`` actually consults it)."""
+    return jax.jit(make_integrated_round(loss_fn, spec, n_rounds=n_rounds))
 
 
 def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
@@ -592,8 +694,12 @@ def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
             "mesh-sharded execution needs the compiled scan engine: pass a "
             "static batch pytree and jit=True (per-round batch callables "
             "would reshard the carry every round)")
-    round_fn = _round_runner(loss_fn, spec) if jit \
-        else make_integrated_round(loss_fn, spec)
+    # the horizon only matters to the forced last-round eval; keep it out of
+    # the runner cache key when eval_every == 1 so K-sweeps share one
+    # compiled round
+    horizon = int(n_rounds) if spec.eval_every > 1 else None
+    round_fn = _round_runner(loss_fn, spec, horizon) if jit \
+        else make_integrated_round(loss_fn, spec, n_rounds=horizon)
     state = init_state(params_single, key, spec.n_clients)
     ledger = ledger if ledger is not None else chain.Ledger()
     history = []

@@ -1,0 +1,167 @@
+"""Spectral-gap diagnostics for mixing topologies and schedules.
+
+The quantity connecting a communication topology to the paper's convergence
+bound is the spectral gap ``1 - |lambda_2(W)|`` of the row-stochastic mixing
+matrix ``W``: after the Steps 2+5 mix, the clients' disagreement (the
+divergence diagnostic of Definition 1, the ``delta`` the bound's h-term is
+built from) contracts by a factor ``|lambda_2(W)|`` per round. A full mesh
+has gap 1 (consensus in one round, the paper's regime — ``delta`` stays at
+its data-heterogeneity floor); a sparse or scheduled topology has gap < 1,
+its residual disagreement feeds the bound's divergence term, and the
+loss-vs-K optimum shifts (the wireless-scheduling regime of
+arXiv:2406.00752).
+
+For a time-varying :class:`~repro.core.topology.Schedule` the per-round gap
+undersells the mix: a one-peer gossip rotation contracts little per round
+but its PRODUCT over a period mixes like a dense graph. The ergodic gap —
+``1 - |lambda_2(W_{T-1} ... W_1 W_0)|^(1/T)``, the per-round geometric rate
+of the product matrix — is the right diagnostic, and what
+``benchmarks/bench_schedules.py`` correlates with the observed consensus
+rate.
+
+Everything here is host-side numpy on small ``[C, C]`` matrices —
+diagnostics, not engine code.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import topology as topology_lib
+
+
+def lambda2_modulus(w) -> float:
+    """|lambda_2|: second-largest eigenvalue modulus of a mixing matrix.
+
+    >>> import numpy as np
+    >>> round(lambda2_modulus(np.full((4, 4), 0.25)), 6)   # full mesh
+    0.0
+    >>> round(lambda2_modulus(np.eye(3)), 6)               # no communication
+    1.0
+    """
+    w = np.asarray(w, np.float64)
+    if w.shape[0] < 2:
+        return 0.0
+    mags = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    return float(mags[1])
+
+
+def spectral_gap(w) -> float:
+    """``1 - |lambda_2(W)|``, clipped to [0, 1] against eigensolver noise.
+
+    1 means one-round consensus (FullMesh), 0 means some disagreement mode
+    never contracts (identity, disconnected components, or the untouched
+    clients of ``PartialParticipation``).
+
+    >>> from repro.core import topology
+    >>> round(spectral_gap(topology.FullMesh().matrix(6)), 6)
+    1.0
+    >>> round(spectral_gap(topology.PartialParticipation(3).matrix(6)), 6)
+    0.0
+    """
+    return float(np.clip(1.0 - lambda2_modulus(w), 0.0, 1.0))
+
+
+def round_matrices(topo: topology_lib.Topology, n_clients: int,
+                   n_rounds: int, *, keys: Optional[Sequence] = None
+                   ) -> List[np.ndarray]:
+    """The mixing matrices of rounds ``0..n_rounds-1`` as host arrays.
+
+    ``keys`` (one PRNG key per round, e.g. from ``rounds.topology_keys``)
+    is required for stochastic topologies/schedules and reproduces the
+    exact graphs a run drew; deterministic ones ignore it.
+    """
+    if topo.stochastic and keys is None:
+        raise ValueError(
+            f"{type(topo).__name__} is stochastic: pass per-round keys "
+            "(rounds.topology_keys reproduces a run's stream)")
+    if isinstance(topo, topology_lib.Schedule) and not topo.stochastic:
+        # deterministic schedule: build each phase matrix once host-side
+        # instead of paying Schedule.matrix's full [P, C, C] table per round
+        p = topo.period(n_clients)
+        phase = {t: np.asarray(topo.matrix_at(t, n_clients))
+                 for t in range(min(p, int(n_rounds)))}
+        return [phase[t % p] for t in range(int(n_rounds))]
+    return [np.asarray(topo.matrix(
+        n_clients, key=keys[t] if keys is not None else None, round_idx=t))
+        for t in range(int(n_rounds))]
+
+
+def per_round_gaps(topo: topology_lib.Topology, n_clients: int,
+                   n_rounds: int, *, keys: Optional[Sequence] = None
+                   ) -> np.ndarray:
+    """``spectral_gap(W_t)`` for each round ``t``.
+
+    >>> from repro.core import topology
+    >>> gaps = per_round_gaps(topology.FullMesh(), 6, 3)
+    >>> [round(float(g), 6) for g in gaps]
+    [1.0, 1.0, 1.0]
+    """
+    return np.array([spectral_gap(w) for w in round_matrices(
+        topo, n_clients, n_rounds, keys=keys)])
+
+
+def _ergodic_gap_of(ws) -> float:
+    """Per-round gap of a concrete matrix sequence's product."""
+    prod = np.eye(ws[0].shape[0], dtype=np.float64)
+    for w in ws:
+        prod = np.asarray(w, np.float64) @ prod
+    lam2 = lambda2_modulus(prod)
+    # the 1/T-th root amplifies eigensolver noise (1e-17 -> ~1e-2 at T=7);
+    # treat anything at fp-noise scale as the exact rank-one product
+    lam = 0.0 if lam2 < 1e-12 else lam2 ** (1.0 / len(ws))
+    return float(np.clip(1.0 - lam, 0.0, 1.0))
+
+
+def ergodic_gap(topo: topology_lib.Topology, n_clients: int, *,
+                n_rounds: Optional[int] = None,
+                keys: Optional[Sequence] = None) -> float:
+    """Per-round gap of the round-matrix product over a window.
+
+    ``1 - |lambda_2(W_{T-1} ... W_0)|^(1/T)`` with ``T = n_rounds``
+    (default: one schedule period; 1 for static topologies, where this
+    equals :func:`spectral_gap`). This is the geometric consensus rate a
+    schedule actually achieves per round — for a gossip rotation it far
+    exceeds any single phase's gap.
+
+    >>> from repro.core import topology
+    >>> rot = topology.GossipRotation()
+    >>> one_phase = spectral_gap(topology.PairShift(1).matrix(8))
+    >>> ergodic_gap(rot, 8) > one_phase
+    True
+    """
+    if n_rounds is None:
+        n_rounds = (topo.period(n_clients)
+                    if isinstance(topo, topology_lib.Schedule) else 1)
+    return _ergodic_gap_of(round_matrices(topo, n_clients, n_rounds,
+                                          keys=keys))
+
+
+def gap_report(topo: topology_lib.Topology, n_clients: int, n_rounds: int,
+               *, keys: Optional[Sequence] = None) -> dict:
+    """Run-level spectral summary: per-round gaps + the ergodic gap.
+
+    ``predicted_consensus_rate`` is the per-round contraction factor of the
+    disagreement, ``|lambda_2|`` of the product matrix per round — compare
+    it against the observed divergence decay of a run
+    (``benchmarks/bench_schedules.py`` does exactly that).
+
+    >>> from repro.core import topology
+    >>> r = gap_report(topology.FullMesh(), 6, 2)
+    >>> sorted(r) == ['ergodic_gap', 'gap_mean', 'gap_min',
+    ...               'gap_per_round', 'predicted_consensus_rate']
+    True
+    >>> round(r['predicted_consensus_rate'], 6)
+    0.0
+    """
+    ws = round_matrices(topo, n_clients, n_rounds, keys=keys)
+    gaps = np.array([spectral_gap(w) for w in ws])
+    erg = _ergodic_gap_of(ws)
+    return {
+        "gap_per_round": [float(g) for g in gaps],
+        "gap_min": float(gaps.min()),
+        "gap_mean": float(gaps.mean()),
+        "ergodic_gap": erg,
+        "predicted_consensus_rate": float(1.0 - erg),
+    }

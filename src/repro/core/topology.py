@@ -36,6 +36,26 @@ communication independent of C), or ``gather`` (any W: masked all-gather
 fallback). The lowered paths live in ``core/aggregation`` and reproduce
 their dense twins bit for bit — see that module's docstring for why the
 fp32 association is pinned.
+
+Schedules (time-varying topologies)
+-----------------------------------
+
+A :class:`Schedule` is a topology whose mixing matrix varies with the round
+index — the scheduled-broadcast regimes of wireless blockchain-FL
+(arXiv:2406.00752): one-peer gossip rotations (:class:`GossipRotation`),
+epoch-alternating overlays (:class:`AlternatingSchedule`, e.g. ring for k
+rounds then a full-mesh sync round), and SNR-derived link-quality weighting
+(:class:`LinkQualitySchedule`). Every schedule is periodic with period
+``P = period(n_clients)``: round ``t`` uses the phase ``t % P``. The engine
+compiles a schedule into the single ``lax.scan`` without retracing across
+K — deterministic schedules become a static ``[P, C, C]`` matrix table
+indexed by the traced round counter (or, for rotations, a ``lax.switch``
+over P static permute branches), stochastic ones draw their phase graph
+from the carried PRNG key exactly like ``RandomGraph`` — so the compiled
+scan and the per-round Python loop stay bit-for-bit equivalent. The
+spectral quantity connecting a schedule to the paper's bound — the gap
+``1 - |lambda_2(W)|`` and its ergodic product-matrix version — lives in
+``core/spectral.py``.
 """
 from __future__ import annotations
 
@@ -64,6 +84,11 @@ class MixLowering:
     ``offsets`` order (the order is part of the contract — it pins the fp32
     association so dense and sharded execution agree bitwise).
 
+    ``offsets_table`` is the schedule variant: one offsets tuple per phase
+    of a periodic schedule (``GossipRotation``), dispatched by the traced
+    round counter through a ``lax.switch`` over static permute branches —
+    round-dependent offsets with no retrace across K.
+
     >>> Ring(neighbors=1).lowering(8).kind
     'neighbor_permute'
     >>> Ring(neighbors=1).lowering(8).offsets
@@ -72,10 +97,13 @@ class MixLowering:
     'all_reduce'
     >>> RandomGraph(p_link=0.5).lowering(8).kind
     'gather'
+    >>> GossipRotation().lowering(4).offsets_table
+    ((0, 1), (0, 2), (0, 3))
     """
     kind: str
     offsets: Tuple[int, ...] = ()
     weight: float = 0.0
+    offsets_table: Tuple[Tuple[int, ...], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,8 +115,10 @@ class Topology:
     ``W[i, j]`` is the weight client i puts on client j's broadcast model
     (``aggregation.mix``; row-stochasticity is what keeps the mix a convex
     combination, so a consensus state is a fixed point for every topology).
-    ``key``/``round_idx`` are only consulted when :attr:`stochastic` is True;
-    both may be traced values (the engine calls this inside ``lax.scan``).
+    ``key`` is only consulted when :attr:`stochastic` is True; ``round_idx``
+    additionally selects the phase of a :class:`Schedule` (time-varying
+    topologies — deterministic ones read it too). Both may be traced values
+    (the engine calls this inside ``lax.scan``).
     """
 
     @property
@@ -215,11 +245,243 @@ class PartialParticipation(Topology):
         return jnp.asarray(w)
 
 
-def from_name(name: str) -> Topology:
-    """Parse a CLI-friendly topology spec.
+@dataclasses.dataclass(frozen=True)
+class PairShift(Topology):
+    """One-peer pairing at a fixed shift: client ``i`` averages itself with
+    client ``(i + shift) % C``, each at weight 1/2 — one phase of a gossip
+    rotation, also usable standalone. ``shift % C == 0`` degenerates to the
+    identity (every client keeps its own model).
 
-    ``full`` | ``ring[:neighbors]`` | ``random[:p_link]`` |
-    ``partial:n_active`` — e.g. ``ring:2``, ``random:0.5``, ``partial:10``.
+    >>> import numpy as np
+    >>> w = np.asarray(PairShift(shift=1).matrix(4))
+    >>> [float(v) for v in w[0]]
+    [0.5, 0.5, 0.0, 0.0]
+    >>> bool(np.allclose(w.sum(axis=0), 1.0))    # doubly stochastic
+    True
+    """
+    shift: int = 1
+
+    def __post_init__(self):
+        if self.shift < 0:
+            raise ValueError("PairShift needs shift >= 0")
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        w = np.zeros((n_clients, n_clients), np.float32)
+        for i in range(n_clients):
+            w[i, i] += 0.5
+            w[i, (i + self.shift) % n_clients] += 0.5
+        return jnp.asarray(w)
+
+    def lowering(self, n_clients: int) -> MixLowering:
+        """Self + one partner ``collective_permute`` (any shift — the halo
+        generalizes to whole-block permutes, see
+        ``aggregation.mix_shift_halo``)."""
+        return MixLowering(kind=NEIGHBOR_PERMUTE,
+                           offsets=(0, self.shift % n_clients), weight=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Schedules: round-indexed (time-varying) topologies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule(Topology):
+    """A time-varying topology: a periodic, round-indexed sequence of mixing
+    matrices.
+
+    Subclasses define the schedule through three hooks:
+
+      * :meth:`period` — the cycle length ``P`` (may depend on C);
+      * :meth:`topology_at` — the per-phase :class:`Topology` (or override
+        :meth:`matrix_at` directly for schedules that construct raw ``W``);
+      * the inherited :meth:`matrix` dispatches on the (possibly traced)
+        ``round_idx``: deterministic schedules index a static ``[P, C, C]``
+        table, stochastic ones ``lax.switch`` into the phase's keyed draw —
+        either way one trace covers every round of the compiled scan.
+
+    The engine treats ``round_idx`` as position in the schedule, so the
+    per-round Python loop and the ``lax.scan`` engine see identical
+    matrices round for round.
+    """
+
+    def period(self, n_clients: int) -> int:
+        """Cycle length P: round ``t`` uses phase ``t % P``."""
+        raise NotImplementedError
+
+    def topology_at(self, t: int, n_clients: int) -> Topology:
+        """The topology of phase ``t`` (``0 <= t < P``), host-side."""
+        raise NotImplementedError
+
+    def matrix_at(self, t: int, n_clients: int, *, key=None) -> jnp.ndarray:
+        """Mixing matrix of phase ``t`` (concrete ``t``)."""
+        return self.topology_at(t, n_clients).matrix(
+            n_clients, key=key, round_idx=t)
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        p = self.period(n_clients)
+        idx = jnp.mod(jnp.asarray(0 if round_idx is None else round_idx,
+                                  jnp.int32), p)
+        if not self.stochastic:
+            table = jnp.stack([self.matrix_at(t, n_clients)
+                               for t in range(p)])
+            return table[idx]
+        if key is None:
+            raise ValueError("a stochastic Schedule needs a PRNG key")
+        return jax.lax.switch(
+            idx, [lambda k, t=t: self.matrix_at(t, n_clients, key=k)
+                  for t in range(p)], key)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipRotation(Schedule):
+    """One-peer gossip rotation: at round ``t`` every client pair-averages
+    with the partner at shift ``1 + (t * step) % (C - 1)`` — a round-robin
+    ``collective_permute`` partner that cycles through every other client
+    once per period ``C - 1`` (for ``step`` coprime with ``C - 1``). Each
+    round moves one model per client (the cheapest possible broadcast), yet
+    the product over a period mixes like a dense graph — the ergodic gap in
+    ``core/spectral.py`` makes that precise.
+
+    >>> GossipRotation().period(5)
+    4
+    >>> [GossipRotation().shift_at(t, 5) for t in range(4)]
+    [1, 2, 3, 4]
+    >>> GossipRotation(step=2).shift_at(1, 6)
+    3
+    """
+    step: int = 1
+
+    def __post_init__(self):
+        if self.step < 1:
+            raise ValueError("GossipRotation needs step >= 1")
+
+    def period(self, n_clients: int) -> int:
+        return max(n_clients - 1, 1)
+
+    def shift_at(self, t: int, n_clients: int) -> int:
+        if n_clients <= 1:
+            return 0
+        return 1 + (t * self.step) % (n_clients - 1)
+
+    def topology_at(self, t: int, n_clients: int) -> Topology:
+        return PairShift(shift=self.shift_at(t, n_clients))
+
+    def lowering(self, n_clients: int) -> MixLowering:
+        """Round-dependent ``neighbor_permute``: one offsets pair per phase,
+        dispatched by ``lax.switch`` on the round counter."""
+        table = tuple((0, self.shift_at(t, n_clients))
+                      for t in range(self.period(n_clients)))
+        return MixLowering(kind=NEIGHBOR_PERMUTE, weight=0.5,
+                           offsets_table=table)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlternatingSchedule(Schedule):
+    """Epoch-alternating overlay: cycle through ``phases`` — each a
+    ``(topology, n_rounds)`` pair — e.g. ring gossip for k rounds, then one
+    full-mesh sync round. Stochastic phase topologies (``RandomGraph``) are
+    allowed; the schedule is then stochastic as a whole and draws from the
+    engine's per-round topology key.
+
+    >>> s = AlternatingSchedule(((Ring(neighbors=1), 2), (FullMesh(), 1)))
+    >>> s.period(8)
+    3
+    >>> [type(s.topology_at(t, 8)).__name__ for t in range(3)]
+    ['Ring', 'Ring', 'FullMesh']
+    """
+    phases: Tuple[Tuple[Topology, int], ...]
+
+    def __post_init__(self):
+        if not self.phases:
+            raise ValueError("AlternatingSchedule needs at least one phase")
+        for topo, n in self.phases:
+            if not isinstance(topo, Topology):
+                raise ValueError(f"phase topology {topo!r} is not a Topology")
+            if n < 1:
+                raise ValueError("phase lengths must be >= 1")
+
+    @property
+    def stochastic(self) -> bool:
+        return any(t.stochastic for t, _ in self.phases)
+
+    def period(self, n_clients: int) -> int:
+        return sum(n for _, n in self.phases)
+
+    def topology_at(self, t: int, n_clients: int) -> Topology:
+        t %= self.period(n_clients)
+        for topo, n in self.phases:
+            if t < n:
+                return topo
+            t -= n
+        raise AssertionError("unreachable: t < period by construction")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkQualitySchedule(Schedule):
+    """SNR-derived link-quality mixing with periodic fading.
+
+    A stylized wireless model on the client ring (arXiv:2406.00752 regime):
+    link (i, j) sees ``snr_db - pathloss_db * ring_distance(i, j)`` plus a
+    deterministic periodic fading term (period ``fading_period`` rounds,
+    per-edge phase), and its weight is the SNR-to-delivery sigmoid
+    ``q = snr_lin / (1 + snr_lin)`` — the normalized-capacity / success
+    probability proxy. Self links are perfect (``q_ii = 1``) and rows
+    renormalize, so every phase matrix is row-stochastic with strictly
+    positive entries (ergodic). Per-edge qualities multiply the ``|D_j|``
+    data weights when the engine mixes with ``RoundSpec.data_weights``
+    (``aggregation.mix(..., weights=)``).
+
+    >>> import numpy as np
+    >>> s = LinkQualitySchedule(fading_period=4)
+    >>> s.period(6)
+    4
+    >>> w = np.asarray(s.matrix_at(0, 6))
+    >>> bool(np.allclose(w.sum(axis=1), 1.0)) and bool((w > 0).all())
+    True
+    """
+    snr_db: float = 8.0        # reference SNR of a nearest-neighbor link
+    pathloss_db: float = 3.0   # attenuation per ring hop
+    fading_db: float = 6.0     # peak-to-peak deterministic fading swing
+    fading_period: int = 8     # rounds per fading cycle
+
+    def __post_init__(self):
+        if self.fading_period < 1:
+            raise ValueError("LinkQualitySchedule needs fading_period >= 1")
+
+    def period(self, n_clients: int) -> int:
+        return self.fading_period
+
+    def matrix_at(self, t: int, n_clients: int, *, key=None) -> jnp.ndarray:
+        i = np.arange(n_clients)[:, None]
+        j = np.arange(n_clients)[None, :]
+        dist = np.minimum(np.abs(i - j), n_clients - np.abs(i - j))
+        # per-edge fading phase so links fade at different rounds
+        fade = 0.5 * self.fading_db * np.cos(
+            2.0 * np.pi * (t / self.fading_period + (i + j) / n_clients))
+        snr_lin = 10.0 ** ((self.snr_db - self.pathloss_db * (dist - 1) + fade)
+                           / 10.0)
+        q = snr_lin / (1.0 + snr_lin)
+        np.fill_diagonal(q, 1.0)
+        w = (q / q.sum(axis=1, keepdims=True)).astype(np.float32)
+        return jnp.asarray(w)
+
+
+def from_name(name: str) -> Topology:
+    """Parse a CLI-friendly topology / schedule spec.
+
+    Static: ``full`` | ``ring[:neighbors]`` | ``random[:p_link]`` |
+    ``partial:n_active`` | ``shift[:s]`` — e.g. ``ring:2``, ``random:0.5``,
+    ``partial:10``. Schedules: ``rotate[:step]`` (one-peer gossip rotation)
+    | ``alt[:ring_rounds[:mesh_rounds]]`` (ring epochs + full-mesh sync) |
+    ``snr[:fading_period]`` (link-quality weighting).
+
+    >>> from_name("rotate") == GossipRotation()
+    True
+    >>> from_name("alt:3:1").phases[0]
+    (Ring(neighbors=1), 3)
+    >>> from_name("snr:4").fading_period
+    4
     """
     head, _, arg = name.strip().lower().partition(":")
     if head in ("full", "full_mesh", "fullmesh", "mesh"):
@@ -232,5 +494,18 @@ def from_name(name: str) -> Topology:
         if not arg:
             raise ValueError("partial topology needs a size: partial:<n_active>")
         return PartialParticipation(n_active=int(arg))
+    if head in ("shift", "pair"):
+        return PairShift(shift=int(arg) if arg else 1)
+    if head in ("rotate", "rotation", "gossip"):
+        return GossipRotation(step=int(arg) if arg else 1)
+    if head in ("alt", "alternate", "alternating"):
+        ring_rounds, _, mesh_rounds = arg.partition(":")
+        return AlternatingSchedule((
+            (Ring(neighbors=1), int(ring_rounds) if ring_rounds else 3),
+            (FullMesh(), int(mesh_rounds) if mesh_rounds else 1)))
+    if head in ("snr", "linkquality", "link_quality"):
+        return LinkQualitySchedule(
+            fading_period=int(arg) if arg else 8)
     raise ValueError(f"unknown topology {name!r} "
-                     "(expected full | ring[:k] | random[:p] | partial:n)")
+                     "(expected full | ring[:k] | random[:p] | partial:n | "
+                     "shift[:s] | rotate[:step] | alt[:k[:m]] | snr[:p])")

@@ -29,12 +29,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
-from repro.core import allocation, bounds, chain, rounds, topology
+from repro.core import allocation, bounds, chain, rounds, spectral, topology
 from repro.data.pipeline import FLDataSource, LMDataSource
 from repro.launch.mesh import make_client_mesh
 from repro.models import registry
 from repro.models.mlp import init_mlp, mlp_loss
 from repro.training.metrics import MetricLogger
+
+
+def spectral_fields(spec: rounds.RoundSpec, run_key, n_rounds: int) -> dict:
+    """1 - lambda_2(W) diagnostics for the run's topology/schedule: the
+    per-round gap stats plus the ergodic (product-matrix) gap. Stochastic
+    topologies replay the run's exact per-round key stream."""
+    keys = (rounds.topology_keys(run_key, n_rounds)
+            if spec.topology.stochastic else None)
+    rep = spectral.gap_report(spec.topology, spec.n_clients, n_rounds,
+                              keys=keys)
+    return {"spectral_gap_mean": rep["gap_mean"],
+            "spectral_gap_min": rep["gap_min"],
+            "ergodic_gap": rep["ergodic_gap"],
+            "predicted_consensus_rate": rep["predicted_consensus_rate"]}
 
 
 def run_mlp(args) -> dict:
@@ -55,11 +69,12 @@ def run_mlp(args) -> dict:
     params = init_mlp(jax.random.fold_in(key, 1))
     log = MetricLogger(args.out_dir, "blade_mlp")
     mesh = make_client_mesh(args.devices) if args.devices else None
+    run_key = jax.random.fold_in(key, 2)
     t0 = time.time()
     # static batch -> compiled scan engine (K rounds, one dispatch);
     # --devices shards the client axis of the whole scan over the mesh
     state, hist, ledger = rounds.run_blade_fl(
-        mlp_loss, spec, params, src.static_batch(), jax.random.fold_in(key, 2),
+        mlp_loss, spec, params, src.static_batch(), run_key,
         blade.K, mesh=mesh)
     # final eval on held-out data with the aggregated model
     from repro.core.aggregation import aggregate_once
@@ -74,6 +89,7 @@ def run_mlp(args) -> dict:
         "chain_valid": ledger.validate_chain(), "blocks": len(ledger.blocks),
         "devices": mesh.devices.size if mesh is not None else 1,
         "wall_s": time.time() - t0,
+        **spectral_fields(spec, run_key, blade.K),
     }
     print(json.dumps(result, indent=1))
     return result
@@ -95,18 +111,20 @@ def run_arch_smoke(args) -> dict:
         return registry.loss_fn(p, cfg, b, remat=False)
 
     mesh = make_client_mesh(args.devices) if args.devices else None
+    run_key = jax.random.fold_in(key, 2)
     t0 = time.time()
     # stacked [K, C, ...] token streams -> compiled scan engine;
     # --devices shards the client axis over the mesh, same as the mlp path
     state, hist, ledger = rounds.run_blade_fl(
         loss_fn, spec, params, src.stacked_batches(args.rounds),
-        jax.random.fold_in(key, 2), args.rounds, stacked=True, mesh=mesh)
+        run_key, args.rounds, stacked=True, mesh=mesh)
     result = {
         "arch": cfg.name, "rounds": args.rounds,
         "loss_curve": [h["global_loss"] for h in hist],
         "chain_valid": ledger.validate_chain(),
         "devices": mesh.devices.size if mesh is not None else 1,
         "wall_s": time.time() - t0,
+        **spectral_fields(spec, run_key, args.rounds),
     }
     print(json.dumps(result, indent=1))
     return result
@@ -131,7 +149,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--topology", default="full",
                     help="Steps 2+5 mixing: full | ring[:k] | random[:p] | "
-                         "partial:n (core/topology.py)")
+                         "partial:n | shift[:s] (core/topology.py)")
+    ap.add_argument("--schedule", default=None,
+                    help="time-varying topology schedule (overrides "
+                         "--topology): rotate[:step] | alt[:k[:m]] | "
+                         "snr[:period] (core/topology.py Schedules)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="global-loss eval stride (NaN on skipped rounds)")
     ap.add_argument("--devices", type=int, default=0,
@@ -140,6 +162,8 @@ def main():
                          "clients %% devices == 0; see docs/architecture.md)")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args()
+    if args.schedule:
+        args.topology = args.schedule
     if args.arch == "mlp":
         run_mlp(args)
     else:

@@ -91,7 +91,73 @@ class TestLazyBound:
         assert k_noisy <= k_lazy
 
 
+class TestConvexityGrid:
+    """Regression: second differences must never span a vacuous-bound gap."""
+
+    def _patch_curve(self, monkeypatch, curve):
+        # is_convex_in_k's grid for the default params is K = 1..9; fake the
+        # bound values per K (inf = vacuous bound inside the grid).
+        def fake_loss_bound(p, k, **lazy):
+            return curve[k - 1]
+        monkeypatch.setattr(bounds, "loss_bound", fake_loss_bound)
+
+    def test_gap_in_grid_does_not_fake_nonconvexity(self, monkeypatch):
+        # Each contiguous finite window is (vacuously) convex, but the
+        # filtered concatenation [1.0, 1.5, 2.5, 2.0] has a negative second
+        # difference — the pre-fix code diffed across the gap and returned
+        # False here.
+        inf = float("inf")
+        self._patch_curve(monkeypatch,
+                          [1.0, 1.5, inf, 2.5, 2.0, inf, inf, inf, inf])
+        assert bounds.is_convex_in_k(make_params())
+
+    def test_nonconvex_within_window_still_detected(self, monkeypatch):
+        inf = float("inf")
+        self._patch_curve(monkeypatch,
+                          [1.0, 3.0, 2.0, 6.0, inf, inf, inf, inf, inf])
+        assert not bounds.is_convex_in_k(make_params())
+
+    def test_real_params_still_convex(self):
+        assert bounds.is_convex_in_k(make_params())
+
+    def test_finite_runs_helper(self):
+        inf = float("inf")
+        assert bounds._finite_runs([1.0, inf, 2.0, 3.0, inf]) == \
+            [[1.0], [2.0, 3.0]]
+        assert bounds._finite_runs([inf, inf]) == []
+
+
 class TestEstimate:
     def test_estimate_constants_sane(self):
         c = bounds.estimate_constants([2.0, 1.5, 1.2, 1.0, 0.9])
         assert c["L"] > 0 and c["xi"] > 0 and c["delta"] > 0
+
+    def test_grad_norms_are_read(self):
+        # Regression: the pre-fix code accepted grad_norms and ignored it.
+        curve = [2.0, 1.5, 1.2]
+        c_loss = bounds.estimate_constants(curve)
+        c_grad = bounds.estimate_constants(curve, grad_norms=[1.0, 0.8, 0.5])
+        assert c_grad != c_loss
+        # xi is a gradient-norm bound: with observations, it's max |g|
+        assert c_grad["xi"] == pytest.approx(1.0)
+        # L = max_t |dg_t| * g_t / |dl_t|: max(0.2*1.0/0.5, 0.3*0.8/0.3)
+        assert c_grad["L"] == pytest.approx(0.8)
+        # delta comes from the loss curve either way
+        assert c_grad["delta"] == c_loss["delta"]
+
+    def test_grad_norms_plateau_round_does_not_explode_l(self):
+        # a flat loss increment with a nonzero gradient change must not
+        # dominate the L max via the near-zero denominator
+        c = bounds.estimate_constants([1.0, 1.0, 0.8],
+                                      grad_norms=[0.5, 0.3, 0.2])
+        assert c["L"] == pytest.approx(0.1 * 0.3 / 0.2)   # the moved round
+
+    def test_grad_norms_degenerate_falls_back(self):
+        # one gradient observation can't form a difference -> loss heuristic
+        c1 = bounds.estimate_constants([2.0, 1.5, 1.2], grad_norms=[1.0])
+        c0 = bounds.estimate_constants([2.0, 1.5, 1.2])
+        assert c1 == c0
+        # flat loss curve: the increment ratio is guarded, L falls back 2*xi
+        c = bounds.estimate_constants([1.0, 1.0, 1.0],
+                                      grad_norms=[0.5, 0.5, 0.5])
+        assert math.isfinite(c["L"]) and c["L"] > 0

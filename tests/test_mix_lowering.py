@@ -51,6 +51,22 @@ def test_ring_degenerate_window_falls_back_to_gather():
         topology.NEIGHBOR_PERMUTE
 
 
+def test_schedule_lowering_dispatch():
+    # rotation: round-dependent neighbor_permute offsets, one pair per phase
+    low = topology.GossipRotation().lowering(8)
+    assert low.kind == topology.NEIGHBOR_PERMUTE
+    assert low.weight == pytest.approx(0.5)
+    assert len(low.offsets_table) == 7
+    assert low.offsets_table[0] == (0, 1) and low.offsets_table[6] == (0, 7)
+    # pair shift: static neighbor_permute at any shift
+    assert topology.PairShift(shift=5).lowering(8).offsets == (0, 5)
+    # other schedules: gather fallback (static table / keyed draw)
+    alt = topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1)))
+    assert alt.lowering(8).kind == topology.GATHER
+    assert topology.LinkQualitySchedule().lowering(8).kind == topology.GATHER
+
+
 # ---------------------------------------------------------------------------
 # Dense paths
 # ---------------------------------------------------------------------------
@@ -123,6 +139,67 @@ def test_sharded_mix_bitwise_equals_dense(topo):
                             out_specs=P("data"), check_rep=False))(p)
     for k in p:
         np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+@pytest.mark.parametrize("shift", [0, 1, 3, 5, 7, 9])
+def test_mix_shift_halo_matches_rolls_bitwise(shift):
+    """The arbitrary-shift halo (block ppermutes + static slice) equals the
+    dense roll form bit for bit, for shifts beyond one block and wrapping."""
+    c = 8
+    p = _params(jax.random.key(5), c=c)
+    offsets = (0, shift)
+    mesh = _one_device_mesh()
+    want = jax.jit(lambda q: aggregation.mix_rolls(q, offsets, 0.5))(p)
+    got = jax.jit(shard_map(
+        lambda q: aggregation.mix_shift_halo(q, offsets, 0.5, "data"),
+        mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+        check_rep=False))(p)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+def test_mix_shift_halo_dense_mode_is_rolls():
+    p = _params(jax.random.key(6), c=4)
+    got = aggregation.mix_shift_halo(p, (0, 2), 0.5, None)
+    want = aggregation.mix_rolls(p, (0, 2), 0.5)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+@pytest.mark.parametrize("sched", [
+    topology.GossipRotation(),
+    topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1))),
+    topology.AlternatingSchedule(
+        ((topology.RandomGraph(p_link=0.6), 1), (topology.FullMesh(), 1))),
+    topology.LinkQualitySchedule(fading_period=3),
+], ids=lambda t: type(t).__name__)
+def test_sharded_schedule_mix_bitwise_equals_dense(sched):
+    """Per-phase: the schedule's sharded mix (switch over permute branches /
+    table-indexed gather) equals the dense matrix mix bitwise at every
+    round of a period."""
+    c = 8
+    p = _params(jax.random.key(7), c=c)
+    mesh = _one_device_mesh()
+    low = sched.lowering(c)
+    for t in range(sched.period(c)):
+        key = jax.random.key(13)
+        w = sched.matrix(c, key=key if sched.stochastic else None,
+                         round_idx=jnp.int32(t))
+        if low.offsets_table:
+            offs = low.offsets_table[t]
+            want = aggregation.mix_rolls(p, offs, low.weight)
+            sharded = lambda q: aggregation.mix_shift_halo(  # noqa: E731
+                q, offs, low.weight, "data")
+        else:
+            want = aggregation.mix(p, w)
+            sharded = lambda q: aggregation.mix_gather(  # noqa: E731
+                q, w, axis_name="data", n_shards=1)
+        got = jax.jit(shard_map(sharded, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data"), check_rep=False))(p)
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
 
 
 def test_client_gather_slice_roundtrip_under_shard_map():

@@ -50,6 +50,21 @@ def test_sharded_scan_bitwise_equivalence_subprocess():
             ("random_graph_stride", topology.RandomGraph(p_link=0.6),
              dict(eval_every=2)),
             ("partial", topology.PartialParticipation(n_active=3), {}),
+            # schedules: rotation = switch over shift-halo permute branches
+            # (shifts run past the 2-client block), alternating = static W
+            # table scanned by round_idx (with a stochastic-phase variant),
+            # snr = table + |D_i|-weighted rows
+            ("rotate_schedule", topology.GossipRotation(),
+             dict(n_lazy=1, sigma2=0.05)),
+            ("alt_schedule", topology.AlternatingSchedule(
+                ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1))),
+             {}),
+            ("alt_schedule_random", topology.AlternatingSchedule(
+                ((topology.RandomGraph(p_link=0.6), 1),
+                 (topology.FullMesh(), 1))), {}),
+            ("snr_weighted", topology.LinkQualitySchedule(fading_period=3),
+             dict(data_weights=tuple(float(i + 1) for i in range(8)))),
+            ("pair_shift_cross_block", topology.PairShift(shift=5), {}),
         ]
         out = {}
         for name, topo, extra in cases:

@@ -171,7 +171,14 @@ def test_shipped_topologies_row_stochastic(c, seed, ring_k, p_link):
 
     topos = [topology.FullMesh(), topology.Ring(min(ring_k, max(c // 2, 1))),
              topology.RandomGraph(p_link),
-             topology.PartialParticipation(n_active=max(c // 2, 1))]
+             topology.PartialParticipation(n_active=max(c // 2, 1)),
+             topology.PairShift(shift=seed % (c + 2)),
+             topology.GossipRotation(step=1 + seed % 3),
+             topology.AlternatingSchedule((
+                 (topology.Ring(neighbors=1), 1 + seed % 3),
+                 (topology.RandomGraph(p_link), 1),
+                 (topology.FullMesh(), 1))),
+             topology.LinkQualitySchedule(fading_period=1 + seed % 5)]
     for t in topos:
         w = np.asarray(t.matrix(c, key=jax.random.key(seed),
                                 round_idx=jnp.int32(seed % 7)))

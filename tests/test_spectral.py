@@ -1,0 +1,186 @@
+"""Spectral-gap diagnostics (core/spectral.py): invariants of 1 - |lambda_2|
+per topology/schedule, the ergodic product-matrix gap, and the link to the
+engine's observed consensus contraction."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import rounds, spectral, topology
+
+STATIC_TOPOLOGIES = [
+    topology.FullMesh(),
+    topology.Ring(neighbors=1),
+    topology.Ring(neighbors=2),
+    topology.PartialParticipation(n_active=3),
+    topology.PairShift(shift=1),
+]
+
+SCHEDULES = [
+    topology.GossipRotation(),
+    topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1))),
+    topology.LinkQualitySchedule(fading_period=3),
+]
+
+
+def _ids(t):
+    return type(t).__name__
+
+
+# ---------------------------------------------------------------------------
+# Gap invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", STATIC_TOPOLOGIES + SCHEDULES, ids=_ids)
+def test_gap_in_unit_interval_every_round(topo):
+    gaps = spectral.per_round_gaps(topo, 8, 5)
+    assert ((gaps >= 0.0) & (gaps <= 1.0)).all()
+    erg = spectral.ergodic_gap(topo, 8, n_rounds=5)
+    assert 0.0 <= erg <= 1.0
+
+
+def test_full_mesh_gap_is_one():
+    assert spectral.spectral_gap(topology.FullMesh().matrix(8)) == \
+        pytest.approx(1.0)
+
+
+def test_identity_and_partial_participation_gap_zero():
+    assert spectral.spectral_gap(np.eye(6)) == pytest.approx(0.0)
+    # inactive clients never mix: a disagreement mode survives every round
+    w = topology.PartialParticipation(n_active=3).matrix(6)
+    assert spectral.spectral_gap(w) == pytest.approx(0.0)
+
+
+def test_ring_gap_monotone_in_window():
+    c = 12
+    gaps = [spectral.spectral_gap(topology.Ring(neighbors=k).matrix(c))
+            for k in range(1, c // 2 + 1)]
+    assert all(a < b for a, b in zip(gaps, gaps[1:]))
+    assert gaps[-1] == pytest.approx(1.0)   # window covers the mesh
+
+
+def test_stochastic_topology_needs_keys():
+    with pytest.raises(ValueError, match="stochastic"):
+        spectral.per_round_gaps(topology.RandomGraph(0.5), 6, 3)
+    keys = rounds.topology_keys(jax.random.key(0), 3)
+    gaps = spectral.per_round_gaps(topology.RandomGraph(0.5), 6, 3, keys=keys)
+    assert ((gaps >= 0.0) & (gaps <= 1.0)).all()
+
+
+def test_topology_keys_match_engine_stream():
+    """topology_keys replays the ENGINE's per-round k_topo stream: mixing a
+    distinct-per-client params tree through the replayed round-0 RandomGraph
+    matrix reproduces the params the real round body emits (tau=0 isolates
+    the mix: no training, no lazy/DP perturbation)."""
+    import jax.numpy as jnp
+    from repro.core import aggregation
+
+    c, run_key = 6, jax.random.key(7)
+    topo = topology.RandomGraph(p_link=0.5)
+    spec = rounds.RoundSpec(n_clients=c, tau=0, eta=0.1, mine_attempts=8,
+                            difficulty_bits=1, eval_global_loss=False,
+                            topology=topo)
+
+    def loss_fn(p, b):
+        return jnp.mean(p["w"] ** 2), {}
+
+    params = {"w": jnp.arange(float(c * 3)).reshape(c, 3)}
+    batch = {"x": jnp.zeros((c, 1))}
+    round_fn = rounds.make_integrated_round(loss_fn, spec)
+    state = rounds.RoundState(params=params, key=run_key,
+                              round_idx=jnp.int32(0),
+                              prev_hash=jnp.uint32(0))
+    new_state, _ = round_fn(state, batch)
+
+    (k_topo,) = rounds.topology_keys(run_key, 1)
+    w = topo.matrix(c, key=k_topo, round_idx=jnp.int32(0))
+    want = aggregation.mix(params, w)
+    np.testing.assert_allclose(np.asarray(new_state.params["w"]),
+                               np.asarray(want["w"]), rtol=1e-6)
+    # and the replay must NOT equal a naively-unsplit key's draw
+    wrong = aggregation.mix(
+        params, topo.matrix(c, key=run_key, round_idx=jnp.int32(0)))
+    assert not np.allclose(np.asarray(new_state.params["w"]),
+                           np.asarray(wrong["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Ergodic (product-matrix) gap
+# ---------------------------------------------------------------------------
+
+
+def test_ergodic_gap_of_static_topology_is_its_gap():
+    for topo in (topology.Ring(neighbors=1), topology.FullMesh()):
+        assert spectral.ergodic_gap(topo, 8) == pytest.approx(
+            spectral.spectral_gap(topo.matrix(8)), abs=1e-9)
+
+
+def test_rotation_ergodic_gap_beats_every_phase():
+    """The rotation's whole-period product mixes far better than any single
+    pair-averaging phase — the reason per-round gaps undersell schedules."""
+    c = 8
+    rot = topology.GossipRotation()
+    phase_gaps = spectral.per_round_gaps(rot, c, rot.period(c))
+    erg = spectral.ergodic_gap(rot, c)
+    assert erg > phase_gaps.max()
+    assert erg > 0.9
+
+
+def test_alternating_ergodic_gap_is_one_with_mesh_sync():
+    """A full-mesh round anywhere in the period collapses all disagreement:
+    the product matrix is rank one -> per-round ergodic gap 1."""
+    sched = topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1)))
+    assert spectral.ergodic_gap(sched, 8) == pytest.approx(1.0)
+
+
+def test_gap_report_schema_and_consistency():
+    rep = spectral.gap_report(topology.GossipRotation(), 8, 7)
+    assert set(rep) == {"gap_per_round", "gap_min", "gap_mean",
+                        "ergodic_gap", "predicted_consensus_rate"}
+    assert len(rep["gap_per_round"]) == 7
+    assert rep["gap_min"] == min(rep["gap_per_round"])
+    assert rep["predicted_consensus_rate"] == \
+        pytest.approx(1.0 - rep["ergodic_gap"])
+
+
+# ---------------------------------------------------------------------------
+# Gap vs the engine's observed consensus contraction
+# ---------------------------------------------------------------------------
+
+
+def test_gap_orders_observed_consensus():
+    """Higher ergodic gap -> faster observed divergence decay in the real
+    engine (same data, same seeds). FullMesh (gap 1) collapses the spread;
+    Ring(1) (small gap) leaves the most; the rotation sits strictly
+    between its phase gaps and the mesh."""
+    from repro.data.pipeline import FLDataSource
+    from repro.models.mlp import init_mlp, mlp_loss
+    from repro.core.aggregation import client_divergence
+
+    c, k = 8, 7
+    key = jax.random.key(3)
+    src = FLDataSource(key, c, samples_per_client=32, seed=3)
+    params = init_mlp(jax.random.fold_in(key, 1))
+
+    def final_spread(topo):
+        spec = rounds.RoundSpec(n_clients=c, tau=2, eta=0.1, mine_attempts=32,
+                                difficulty_bits=2, topology=topo)
+        st, _, _ = rounds.run_blade_fl(
+            mlp_loss, spec, params, src.static_batch(),
+            jax.random.fold_in(key, 2), k)
+        return float(client_divergence(st.params))
+
+    spreads = {name: final_spread(t) for name, t in [
+        ("mesh", topology.FullMesh()),
+        ("rotate", topology.GossipRotation()),
+        ("ring", topology.Ring(neighbors=1))]}
+    gaps = {name: spectral.ergodic_gap(t, c, n_rounds=k) for name, t in [
+        ("mesh", topology.FullMesh()),
+        ("rotate", topology.GossipRotation()),
+        ("ring", topology.Ring(neighbors=1))]}
+    # over a full period the rotation's product mixes completely (gap -> 1,
+    # like the mesh); the ring never does — and the observed spread follows
+    assert gaps["mesh"] >= gaps["rotate"] > gaps["ring"]
+    assert spreads["mesh"] < spreads["rotate"] < spreads["ring"]

@@ -17,6 +17,17 @@ ALL_TOPOLOGIES = [
     topology.Ring(neighbors=2),
     topology.RandomGraph(p_link=0.6),
     topology.PartialParticipation(n_active=3),
+    topology.PairShift(shift=2),
+]
+
+ALL_SCHEDULES = [
+    topology.GossipRotation(),
+    topology.GossipRotation(step=2),
+    topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1))),
+    topology.AlternatingSchedule(
+        ((topology.RandomGraph(p_link=0.6), 1), (topology.FullMesh(), 1))),
+    topology.LinkQualitySchedule(fading_period=3),
 ]
 
 
@@ -112,6 +123,105 @@ def test_topologies_hashable_in_roundspec():
 
 
 # ---------------------------------------------------------------------------
+# Schedules (time-varying topologies)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULES, ids=_ids)
+def test_schedule_matrices_row_stochastic_every_phase(sched):
+    c = 6
+    for t in range(sched.period(c) + 2):   # + wrap-around rounds
+        w = np.asarray(sched.matrix(c, key=jax.random.key(1),
+                                    round_idx=jnp.int32(t)))
+        assert w.shape == (c, c)
+        assert (w >= 0).all()
+        np.testing.assert_allclose(w.sum(axis=1), np.ones(c), atol=1e-6)
+
+
+def test_rotation_cycles_every_partner():
+    c = 6
+    rot = topology.GossipRotation()
+    assert rot.period(c) == c - 1
+    shifts = [rot.shift_at(t, c) for t in range(rot.period(c))]
+    assert sorted(shifts) == [1, 2, 3, 4, 5]
+    # phase t is the PairShift matrix at that shift, and rounds wrap
+    for t in (0, 3):
+        np.testing.assert_array_equal(
+            np.asarray(rot.matrix(c, round_idx=t)),
+            np.asarray(topology.PairShift(shifts[t]).matrix(c)))
+    np.testing.assert_array_equal(
+        np.asarray(rot.matrix(c, round_idx=rot.period(c))),
+        np.asarray(rot.matrix(c, round_idx=0)))
+
+
+def test_alternating_phase_boundaries():
+    sched = topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1)))
+    c = 5
+    ring_w = np.asarray(topology.Ring(neighbors=1).matrix(c))
+    mesh_w = np.asarray(topology.FullMesh().matrix(c))
+    for t, want in [(0, ring_w), (1, ring_w), (2, mesh_w), (3, ring_w)]:
+        np.testing.assert_array_equal(
+            np.asarray(sched.matrix(c, round_idx=t)), want)
+
+
+def test_alternating_stochastic_phase_draws_from_key():
+    sched = topology.AlternatingSchedule(
+        ((topology.RandomGraph(p_link=0.5), 1), (topology.FullMesh(), 1)))
+    assert sched.stochastic
+    with pytest.raises(ValueError):
+        sched.matrix(6, round_idx=0)     # needs a key
+    w0 = np.asarray(sched.matrix(6, key=jax.random.key(0), round_idx=0))
+    w0b = np.asarray(sched.matrix(6, key=jax.random.key(0), round_idx=0))
+    w1 = np.asarray(sched.matrix(6, key=jax.random.key(0), round_idx=1))
+    np.testing.assert_array_equal(w0, w0b)
+    np.testing.assert_array_equal(w1, np.asarray(topology.FullMesh().matrix(6)))
+
+
+def test_link_quality_fades_over_rounds_and_repeats():
+    sched = topology.LinkQualitySchedule(fading_period=4)
+    ws = [np.asarray(sched.matrix(6, round_idx=t)) for t in range(5)]
+    assert not np.array_equal(ws[0], ws[1])      # fading moves the weights
+    np.testing.assert_array_equal(ws[4], ws[0])  # period 4 repeats
+    for w in ws:
+        assert (w > 0).all()                     # ergodic: every link alive
+
+
+def test_pair_shift_identity_degenerate():
+    np.testing.assert_array_equal(
+        np.asarray(topology.PairShift(shift=4).matrix(4)), np.eye(4))
+
+
+def test_schedule_invalid_params():
+    with pytest.raises(ValueError):
+        topology.GossipRotation(step=0)
+    with pytest.raises(ValueError):
+        topology.AlternatingSchedule(())
+    with pytest.raises(ValueError):
+        topology.AlternatingSchedule(((topology.FullMesh(), 0),))
+    with pytest.raises(ValueError):
+        topology.LinkQualitySchedule(fading_period=0)
+    with pytest.raises(ValueError):
+        topology.PairShift(shift=-1)
+
+
+def test_from_name_schedules():
+    assert topology.from_name("rotate") == topology.GossipRotation()
+    assert topology.from_name("rotate:2") == topology.GossipRotation(step=2)
+    assert topology.from_name("shift:3") == topology.PairShift(shift=3)
+    assert topology.from_name("alt:2:1") == topology.AlternatingSchedule(
+        ((topology.Ring(neighbors=1), 2), (topology.FullMesh(), 1)))
+    assert topology.from_name("snr:4") == \
+        topology.LinkQualitySchedule(fading_period=4)
+
+
+def test_schedules_hashable_in_roundspec():
+    specs = {rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, topology=t)
+             for t in ALL_SCHEDULES}
+    assert len(specs) == len(ALL_SCHEDULES)
+
+
+# ---------------------------------------------------------------------------
 # mix vs fedavg
 # ---------------------------------------------------------------------------
 
@@ -183,6 +293,96 @@ def test_scan_matches_python_loop_per_topology(topo):
     assert led_sc.validate_chain()
     assert [b.header_hash for b in led_py.blocks] == \
         [b.header_hash for b in led_sc.blocks]
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULES, ids=_ids)
+def test_scan_matches_python_loop_per_schedule(sched):
+    """Every shipped Schedule runs inside the compiled scan bit-for-bit
+    equal to the per-round Python loop — K spans more than one period, so
+    the wrap-around phases are exercised too."""
+    n_clients, k_rounds = 5, 7   # GossipRotation period = 4, alt period = 3
+    key = jax.random.key(23)
+    src = FLDataSource(key, n_clients, samples_per_client=32, seed=23)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=2, eta=0.1, n_lazy=1,
+                            sigma2=0.05, mine_attempts=64, difficulty_bits=2,
+                            topology=sched)
+    run_key = jax.random.fold_in(key, 2)
+
+    st_py, hist_py, led_py = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.round_batch, run_key, k_rounds)
+    traces_before = rounds.TRACE_COUNTS["scan_runner"]
+    st_sc, hist_sc, led_sc = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, src.static_batch(), run_key, k_rounds)
+    # the schedule compiles INTO the scan: one trace covers all K rounds
+    assert rounds.TRACE_COUNTS["scan_runner"] - traces_before <= 1
+
+    for a, b in zip(jax.tree.leaves(st_py.params), jax.tree.leaves(st_sc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist_py == hist_sc
+    assert led_sc.validate_chain()
+    assert [b.header_hash for b in led_py.blocks] == \
+        [b.header_hash for b in led_sc.blocks]
+
+
+def test_rotation_reaches_consensus_faster_than_static_ring():
+    """One period of the gossip rotation mixes across the whole client set
+    (ergodic gap ~1) while the static ring leaves structured disagreement —
+    the scenario the schedule axis opens."""
+    n_clients, k_rounds = 8, 7   # one full rotation period
+    key = jax.random.key(5)
+    src = FLDataSource(key, n_clients, samples_per_client=32, seed=5)
+    params = init_mlp(jax.random.fold_in(key, 1))
+
+    def spread_after(topo):
+        spec = rounds.RoundSpec(n_clients=n_clients, tau=2, eta=0.1,
+                                mine_attempts=32, difficulty_bits=2,
+                                topology=topo)
+        st, _, _ = rounds.run_blade_fl(
+            mlp_loss, spec, params, src.static_batch(),
+            jax.random.fold_in(key, 2), k_rounds)
+        return float(aggregation.client_divergence(st.params))
+
+    assert spread_after(topology.GossipRotation()) < \
+        spread_after(topology.Ring(neighbors=1))
+
+
+def test_data_weights_reweight_the_mix():
+    """RoundSpec.data_weights reweights W rows by |D_j|: a weighted
+    FullMesh equals weighted fedavg, and weights must match n_clients."""
+    c = 4
+    key = jax.random.key(11)
+    src = FLDataSource(key, c, samples_per_client=32, seed=11)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    weights = (4.0, 1.0, 1.0, 2.0)
+
+    def run(topo, dw):
+        spec = rounds.RoundSpec(n_clients=c, tau=1, eta=0.1, mine_attempts=32,
+                                difficulty_bits=2, topology=topo,
+                                data_weights=dw)
+        st, _, _ = rounds.run_blade_fl(
+            mlp_loss, spec, params, src.static_batch(),
+            jax.random.fold_in(key, 2), 1)
+        return st.params
+
+    got = run(topology.FullMesh(), weights)
+    plain = run(topology.FullMesh(), None)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(plain)):
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+    # ring with weights routes through the dense matrix path (no halo);
+    # scan-vs-loop equivalence still holds
+    spec = rounds.RoundSpec(n_clients=c, tau=1, eta=0.1, mine_attempts=32,
+                            difficulty_bits=2, topology=topology.Ring(1),
+                            data_weights=weights)
+    st1, h1, _ = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.static_batch(), jax.random.fold_in(key, 2), 2)
+    st2, h2, _ = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.round_batch, jax.random.fold_in(key, 2), 2)
+    assert h1 == h2
+    with pytest.raises(ValueError, match="data_weights"):
+        rounds.make_integrated_round(
+            mlp_loss, rounds.RoundSpec(n_clients=c, tau=1, eta=0.1,
+                                       data_weights=(1.0, 2.0)))
 
 
 def test_full_mesh_round_collapses_spread_ring_does_not():
@@ -268,3 +468,31 @@ def test_eval_every_preserves_dynamics_and_values():
 def test_eval_every_default_history_unchanged():
     _, hist, _ = _run_stride(eval_every=1)
     assert all(math.isfinite(h["global_loss"]) for h in hist)
+
+
+def test_eval_every_forces_final_round_eval():
+    """Regression: with K % eval_every != 0 the last round used to report
+    NaN, which propagated into sweep_k / bench_topology best-K selection.
+    K=5, eval_every=2 must end on a finite eval — on both driver paths."""
+    _, hist, _ = _run_stride(eval_every=2, k_rounds=5)
+    flags = [math.isfinite(h["global_loss"]) for h in hist]
+    assert flags == [False, True, False, True, True]   # forced final eval
+    # python loop pins the identical pattern (scan-vs-loop equivalence)
+    _, hist_py, _ = _run_stride(eval_every=2, k_rounds=5, batches="callable")
+    for hs, hp in zip(hist, hist_py):
+        assert (hs["global_loss"] == hp["global_loss"]) or (
+            math.isnan(hs["global_loss"]) and math.isnan(hp["global_loss"]))
+
+
+def test_eval_every_final_loss_reaches_best_k_selection():
+    """The selection-facing consequence of the fix: run_once at K=5,
+    eval_every=2 reports a finite final_loss for best-K comparison."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import common
+    res = common.run_once(k=5, eval_every=2, n_clients=4, samples=32,
+                          beta=10.0)
+    assert math.isfinite(res["final_loss"])
+    assert math.isfinite(res["loss_curve"][-1])   # last round evaluated
+
