@@ -1,11 +1,27 @@
-"""Rounds/sec of the client-sharded K-round scan engine vs device count.
+"""Rounds/sec of the client-sharded K-round scan engine vs device count,
+gather-side all-reduce (bitwise) vs the opt-in psum fast path side by side.
 
 Each device count runs in its own subprocess because
 ``--xla_force_host_platform_device_count`` must be set before the first jax
 import — the same trick the dry-run and the multi-device tests use. The
 child runs the identical config through ``run_blade_fl_scan`` with a
 ``make_client_mesh`` of that size (1 device = the plain single-device scan)
-and reports warm rounds/sec.
+and reports warm rounds/sec, once per mix lowering mode:
+
+  * ``gather`` — the default bitwise engine (all-gather the broadcast set,
+    replicated full-width math);
+  * ``psum``   — ``RoundSpec.fast_allreduce=True``: one model-sized
+    ``lax.psum`` mixes the clients and the digest/divergence diagnostics
+    psum local partials (tolerance tier, hashes fork; see
+    docs/architecture.md §The tolerance tier).
+
+Alongside rounds/sec each child reports ``est_mix_bytes_per_round`` — the
+analytic per-device receive volume of the communicate stage's collectives
+(all-gather of C−C/D client models vs a ring all-reduce of ONE model,
+2·(D−1)/D·model) — so the JSON records the gather-vs-psum bytes-moved ratio
+the fast path is buying, even on host "devices" where wall-clock barely
+moves (threads share one memory system; the ratio is what transfers to a
+real ICI mesh).
 
 Read CPU numbers as the COST CURVE of the sharded lowering, not a speedup
 claim: host "devices" are threads carved out of the same CPU, so the
@@ -41,6 +57,7 @@ _CHILD = textwrap.dedent("""
     n_dev = int(sys.argv[1]); n_rounds = int(sys.argv[2])
     n_clients = int(sys.argv[3]); samples = int(sys.argv[4])
     tau = int(sys.argv[5]); reps = int(sys.argv[6])
+    fast = bool(int(sys.argv[7]))
     if n_dev > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev}")
@@ -55,9 +72,21 @@ _CHILD = textwrap.dedent("""
     params = init_mlp(jax.random.fold_in(key, 1))
     spec = rounds.RoundSpec(n_clients=n_clients, tau=tau, eta=0.05,
                             n_lazy=2, sigma2=0.01, mine_attempts=256,
-                            difficulty_bits=2)
+                            difficulty_bits=2, fast_allreduce=fast)
     mesh = make_client_mesh(n_dev) if n_dev > 1 else None
     batch, rk = src.static_batch(), jax.random.fold_in(key, 2)
+
+    # analytic per-device receive bytes of the communicate-stage collectives
+    model_bytes = 4 * sum(x.size for x in jax.tree.leaves(params))
+    local = n_clients // n_dev
+    if n_dev == 1:
+        mix_bytes = 0.0
+    elif fast:
+        # ring all-reduce of ONE model (reduce-scatter + all-gather)
+        mix_bytes = 2.0 * (n_dev - 1) / n_dev * model_bytes
+    else:
+        # all-gather of every other shard's client blocks
+        mix_bytes = (n_clients - local) * model_bytes
 
     def run():
         return rounds.run_blade_fl_scan(mlp_loss, spec, params, batch, rk,
@@ -68,8 +97,11 @@ _CHILD = textwrap.dedent("""
     for _ in range(reps):
         state, hist, ledger = run()
     wall = (time.time() - t0) / reps
-    print(json.dumps({"devices": n_dev, "rounds_per_s": n_rounds / wall,
-                      "wall_s": wall, "chain_valid": ledger.validate_chain(),
+    print(json.dumps({"devices": n_dev, "mode": "psum" if fast else "gather",
+                      "rounds_per_s": n_rounds / wall, "wall_s": wall,
+                      "model_bytes": model_bytes,
+                      "est_mix_bytes_per_round": mix_bytes,
+                      "chain_valid": ledger.validate_chain(),
                       "final_global_loss": hist[-1]["global_loss"]}))
 """)
 
@@ -84,23 +116,40 @@ def bench(device_counts=(1, 2, 4, 8), n_rounds: int = 16, n_clients: int = 16,
         if n_clients % d:
             print(f"# skip devices={d}: {n_clients} clients not divisible")
             continue
-        proc = subprocess.run(
-            [sys.executable, "-c", _CHILD, str(d), str(n_rounds),
-             str(n_clients), str(samples), str(tau), str(reps)],
-            capture_output=True, text=True, env=env, timeout=900)
-        if proc.returncode != 0:
-            print(f"# devices={d} FAILED: {proc.stderr[-500:]}")
+        modes = {}
+        for mode, fast in (("gather", 0), ("psum", 1)):
+            proc = subprocess.run(
+                [sys.executable, "-c", _CHILD, str(d), str(n_rounds),
+                 str(n_clients), str(samples), str(tau), str(reps),
+                 str(fast)],
+                capture_output=True, text=True, env=env, timeout=900)
+            if proc.returncode != 0:
+                print(f"# devices={d} {mode} FAILED: {proc.stderr[-500:]}")
+                continue
+            res = json.loads(proc.stdout.strip().splitlines()[-1])
+            modes[mode] = res
+            common.csv_line(
+                f"multidevice_scan_{mode}_D{d}_K{n_rounds}_C{n_clients}",
+                res["wall_s"] / n_rounds * 1e6,
+                f"rounds_per_s={res['rounds_per_s']:.1f}")
+        if not modes:
             continue
-        res = json.loads(proc.stdout.strip().splitlines()[-1])
-        out[d] = res
-        common.csv_line(
-            f"multidevice_scan_D{d}_K{n_rounds}_C{n_clients}",
-            res["wall_s"] / n_rounds * 1e6,
-            f"rounds_per_s={res['rounds_per_s']:.1f}")
-    if 1 in out:
-        base = out[1]["rounds_per_s"]
-        for d, res in out.items():
-            res["vs_single_device"] = res["rounds_per_s"] / base
+        if "gather" in modes and "psum" in modes:
+            g, p = modes["gather"], modes["psum"]
+            modes["psum_vs_gather_speedup"] = (
+                p["rounds_per_s"] / g["rounds_per_s"])
+            if p["est_mix_bytes_per_round"]:
+                modes["gather_vs_psum_bytes_ratio"] = (
+                    g["est_mix_bytes_per_round"]
+                    / p["est_mix_bytes_per_round"])
+        out[d] = modes
+    if 1 in out and "gather" in out[1]:
+        base = out[1]["gather"]["rounds_per_s"]
+        for d, modes in out.items():
+            for mode in ("gather", "psum"):
+                if mode in modes:
+                    modes[mode]["vs_single_device_gather"] = (
+                        modes[mode]["rounds_per_s"] / base)
     return out
 
 

@@ -37,8 +37,34 @@ a permute pattern on the ICI ring) and the reduction runs replicated with
 the identical HLO the single-device engine executes. The neighbor-halo path
 accumulates offsets in the same fixed order as its dense roll-based twin, so
 it too is bitwise stable. A true psum would move ~C/D× less data for the
-full mesh; it is deliberately not used — the hash-linked ledger is the
-ground truth the sharded engine must reproduce.
+full mesh; it is deliberately not the default — the hash-linked ledger is
+the ground truth the sharded engine must reproduce.
+
+The opt-in fast tier (``mix_psum`` / ``mix_psum_dense``)
+--------------------------------------------------------
+
+``RoundSpec.fast_allreduce=True`` trades the bitwise contract for exactly
+that saved data movement:
+
+  ``mix_psum``        rank-1 (uniform-row) mixes — FullMesh and any
+                      ``W = 1 rᵀ``: each shard pre-weights its local client
+                      rows, ONE model-sized ``lax.psum`` produces the shared
+                      aggregate, every client adopts it. O(1) models moved
+                      per device instead of O(C).
+  ``mix_psum_dense``  any dense ``W``: each shard contracts its local client
+                      block against its column block of ``W`` and psums the
+                      ``[C, ...]`` partial products (the SUMMA-style variant
+                      the bitwise tier refuses) — same O(C) volume as the
+                      gather but no materialized full client axis, and the
+                      reduce can ride the ICI all-reduce lanes.
+
+Both reassociate the cross-client fp32 reduction, so their results agree
+with the gathered paths only to float tolerance (rtol ≈ 1e-5 over a K-round
+run) and the model digest — hence every downstream ledger hash — forks from
+the bitwise engine's chain. That is the tolerance equivalence tier:
+``tests/equivalence.py`` holds the assertion helpers,
+``tests/test_fast_allreduce.py`` pins psum-vs-gather agreement, and
+docs/architecture.md §The tolerance tier documents the contract.
 """
 from __future__ import annotations
 
@@ -72,6 +98,18 @@ def fedavg(params, weights: Optional[jnp.ndarray] = None):
     return jax.tree.map(one, params)
 
 
+def _reweight_rows(W: jnp.ndarray,
+                   weights: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """|D_i| row reweighting shared by every dense mix path:
+    ``W'[i, j] ∝ W[i, j] * weights[j]``, renormalized per row. One helper so
+    the bitwise ``mix`` and the psum fast tier cannot drift apart."""
+    W = jnp.asarray(W, jnp.float32)
+    if weights is None:
+        return W
+    W = W * jnp.asarray(weights, jnp.float32)[None, :]
+    return W / jnp.sum(W, axis=1, keepdims=True)
+
+
 def mix(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None):
     """Generalized Steps 2+5: client i adopts ``sum_j W[i, j] * params_j``.
 
@@ -83,10 +121,7 @@ def mix(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None):
     full-mesh W with weights equals weighted ``fedavg``. Accumulation is in
     float32; each leaf round-trips back to its own dtype.
     """
-    W = jnp.asarray(W, jnp.float32)
-    if weights is not None:
-        W = W * jnp.asarray(weights, jnp.float32)[None, :]
-        W = W / jnp.sum(W, axis=1, keepdims=True)
+    W = _reweight_rows(W, weights)
 
     def one(leaf):
         flat = leaf.astype(jnp.float32).reshape((leaf.shape[0], -1))
@@ -331,6 +366,127 @@ def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
     full = client_all_gather(params, axis_name) if full is None else full
     mixed = mix(full, W, weights)
     return client_local_rows(mixed, axis_name, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Opt-in psum fast tier (reassociates fp32 — tolerance tier, not bitwise)
+# ---------------------------------------------------------------------------
+
+
+def mix_psum(params, weights: Optional[jnp.ndarray] = None, *,
+             axis_name: AxisName = None, n_shards: int = 1):
+    """Rank-1 mix as a true in-mesh psum of locally pre-weighted rows.
+
+    Every client adopts the same aggregate ``sum_j w_j x_j / sum_j w_j``
+    (uniform ``w`` = ``fedavg``; ``weights`` may be the |D_i| data sizes, a
+    uniform-row topology's shared row, or their product — any nonnegative
+    per-client weighting). Sharded, each device contracts only its local
+    client block and ONE model-sized ``lax.psum`` finishes the reduction —
+    ~C/D× less data than the gather-side all-reduce, which is the whole
+    point of ``RoundSpec.fast_allreduce``.
+
+    NOT bitwise: the psum reassociates the cross-client fp32 sum (per-shard
+    partials, backend-chosen reduction tree), so results agree with
+    :func:`fedavg` / :func:`mix_all_reduce` only to float tolerance and the
+    model digest forks. With ``axis_name=None`` it is the same
+    sum-then-scale math without the collective (float-close to ``fedavg``,
+    same association as the sharded form up to the psum tree).
+
+    ``weights`` is always the FULL ``[C]`` vector; the local block is sliced
+    by shard index, mirroring how params rows are laid out.
+
+    >>> import jax.numpy as jnp
+    >>> out = mix_psum({"w": jnp.array([[0.0], [2.0], [4.0]])})
+    >>> [float(v) for v in out["w"].ravel()]
+    [2.0, 2.0, 2.0]
+    """
+    denom = None
+    w_local = None
+    if weights is not None:
+        w_full = jnp.asarray(weights, jnp.float32)
+        denom = jnp.sum(w_full)
+        if axis_name is None:
+            w_local = w_full
+        else:
+            idx = client_shard_index(axis_name)
+            local = w_full.shape[0] // n_shards
+            w_local = jax.lax.dynamic_slice_in_dim(w_full, idx * local,
+                                                   local, axis=0)
+
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        if weights is None:
+            part = jnp.sum(x, axis=0)
+        else:
+            part = jnp.tensordot(w_local, x, axes=(0, 0))
+        if axis_name is not None:
+            part = jax.lax.psum(part, axis_name)
+        if weights is None:
+            n_total = x.shape[0] * (n_shards if axis_name is not None else 1)
+            agg = part / jnp.float32(n_total)
+        else:
+            agg = part / denom
+        return jnp.broadcast_to(agg, x.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def mix_psum_dense(params, W: jnp.ndarray,
+                   weights: Optional[jnp.ndarray] = None, *,
+                   axis_name: AxisName = None, n_shards: int = 1):
+    """General-``W`` psum variant: local column-block matmul, then psum.
+
+    Shard d holds client rows ``[d·L, (d+1)·L)``; it contracts them against
+    its COLUMN block ``W[:, d·L:(d+1)·L]`` to produce the ``[C, ...]``
+    partial products every output row owes to its clients, ``lax.psum``s the
+    partials (the SUMMA-style accumulate the bitwise tier deliberately
+    avoids), and keeps its own rows. Volume is O(C) like the gather, but no
+    shard ever materializes the full client axis and the reduction rides
+    the all-reduce lanes. ``W`` may be traced (stochastic topologies /
+    schedule tables). ``weights`` (|D_i|) reweights rows exactly like
+    :func:`mix`.
+
+    NOT bitwise: the contraction is reassociated across shards (tolerance
+    tier). With ``axis_name=None`` this IS :func:`mix`.
+    """
+    if axis_name is None:
+        return mix(params, W, weights)
+    W = _reweight_rows(W, weights)
+    idx = client_shard_index(axis_name)
+    local = W.shape[0] // n_shards
+    w_cols = jax.lax.dynamic_slice_in_dim(W, idx * local, local, axis=1)
+
+    def one(leaf):
+        flat = leaf.astype(jnp.float32).reshape((leaf.shape[0], -1))
+        part = w_cols @ flat                       # [C, F] partial products
+        full = jax.lax.psum(part, axis_name)
+        mine = jax.lax.dynamic_slice_in_dim(full, idx * local, local, axis=0)
+        return mine.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def client_divergence_psum(params, axis_name: AxisName = None,
+                           n_shards: int = 1) -> jnp.ndarray:
+    """Tolerance-tier twin of :func:`client_divergence`: cross-shard
+    reductions as psums of local partials instead of gathered full-width
+    math, so the fast path never materializes the full client axis. Same
+    quantity up to fp32 association."""
+    scale = n_shards if axis_name is not None else 1
+
+    def sq(leaf):
+        x = leaf.astype(jnp.float32)
+        s = jnp.sum(x, axis=0)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        mean = s / jnp.float32(x.shape[0] * scale)
+        return jnp.sum((x - mean) ** 2, axis=tuple(range(1, x.ndim)))
+
+    total = sum(jax.tree.leaves(jax.tree.map(sq, params)))
+    tsum = jnp.sum(total)
+    if axis_name is not None:
+        tsum = jax.lax.psum(tsum, axis_name)
+    return jnp.sqrt(tsum / jnp.float32(total.shape[0] * scale))
 
 
 def client_divergence(params) -> jnp.ndarray:

@@ -48,9 +48,16 @@ def mix_hash(prev_hash: jnp.ndarray, payload: jnp.ndarray,
     return h
 
 
-def digest_tree(tree) -> jnp.ndarray:
+def digest_tree(tree, axis_name=None) -> jnp.ndarray:
     """Cheap uint32 digest of a pytree of arrays (model fingerprint for the
-    block header). Deterministic, differentiation-free."""
+    block header). Deterministic, differentiation-free.
+
+    With ``axis_name`` (inside ``shard_map``, fast-allreduce mode) the tree
+    holds only this shard's client rows and each per-leaf sum is finished
+    with a ``lax.psum`` — no full-axis gather, but the reassociated fp32 sum
+    means the digest (and every downstream ledger hash) FORKS from the
+    bitwise engine's value. The default ``axis_name=None`` full-width sum is
+    the bitwise-contract path."""
     leaves = jax.tree.leaves(tree)
     acc = jnp.uint32(0x9E3779B9)
     for leaf in leaves:
@@ -58,6 +65,8 @@ def digest_tree(tree) -> jnp.ndarray:
         s = jnp.asarray(
             jnp.sum(x.astype(jnp.float32)) if jnp.issubdtype(x.dtype, jnp.floating)
             else jnp.sum(x.astype(jnp.int32)).astype(jnp.float32))
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
         bits = jax.lax.bitcast_convert_type(s, jnp.uint32)
         acc = _avalanche(acc ^ bits)
     return acc

@@ -152,6 +152,15 @@ class RoundSpec:
     # before aggregation (core/detection.py); adds n_suspects to metrics.
     detect_lazy: bool = False
     detect_threshold: float = 0.2
+    # opt-in fast path: lower dense mixes to true in-mesh psums of locally
+    # pre-weighted rows (aggregation.mix_psum / mix_psum_dense) and finish
+    # the digest/divergence diagnostics with psums instead of the broadcast
+    # gather. Moves ~C/D× less data for FullMesh but REASSOCIATES fp32:
+    # results hold to the tolerance tier (rtol ≈ 1e-5 over a K-round run,
+    # tests/test_fast_allreduce.py), not the bitwise contract, and the
+    # sharded ledger hashes fork from the single-device chain (both chains
+    # still self-validate). Default False keeps every path bit-for-bit.
+    fast_allreduce: bool = False
 
 
 class RoundState(NamedTuple):
@@ -326,9 +335,19 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     ``RandomGraph``. ``spec.data_weights`` (|D_i| row reweighting) rides the
     dense-matrix paths — permute lowerings bake uniform window weights, so a
     weighted spec routes ``neighbor_permute`` topologies through their
-    matrices instead."""
+    matrices instead.
+
+    ``spec.fast_allreduce`` reroutes the DENSE kinds onto the reassociating
+    psum tier: a ``psum`` lowering (FullMesh / uniform-row topologies) mixes
+    via ``aggregation.mix_psum`` (one model-sized psum, ~C/D× less data), a
+    ``gather`` kind via ``aggregation.mix_psum_dense`` (local column-block
+    matmul + psum), and the digest / divergence diagnostics are finished
+    with psums of local partials instead of the broadcast-set gather — the
+    fast round never materializes the full client axis (except for lazy
+    detection, which keeps its exact gathered math). Permute lowerings are
+    already O(window) and stay bitwise under the flag."""
     topo = spec.topology
-    low = topo.lowering(spec.n_clients)
+    low = topo.lowering(spec.n_clients, fast_allreduce=spec.fast_allreduce)
     n_local = spec.n_clients // n_shards
     single_axis = (axis_name is None or isinstance(axis_name, str)
                    or len(axis_name) == 1)
@@ -346,6 +365,14 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     # uniform window weights, so weighted mixes go through the dense matrix.
     if weights is not None and kind == topology_lib.NEIGHBOR_PERMUTE:
         kind = topology_lib.GATHER
+    # the opt-in psum tier covers the dense kinds only (permute lowerings
+    # already move O(window) data and stay bitwise)
+    fast_dense = spec.fast_allreduce and kind in (topology_lib.PSUM,
+                                                  topology_lib.GATHER)
+    psum_weights = weights
+    if kind == topology_lib.PSUM and not topo.is_full_mesh:
+        row = jnp.asarray(topo.uniform_row(spec.n_clients), jnp.float32)
+        psum_weights = row if weights is None else row * weights
     rot_offsets = (low.offsets_table
                    if kind == topology_lib.NEIGHBOR_PERMUTE else ())
     # halo needs the window inside one neighbor block and a single mesh axis
@@ -377,6 +404,34 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
         return aggregation.client_local_rows(mixed, axis_name, n_shards)
 
     def communicate(params, prev_params, k_topo, round_idx, full=None):
+        if fast_dense:
+            # tolerance tier: psum'd diagnostics + mix, no broadcast gather.
+            # The digest reassociates fp32 under shard_map, so the ledger
+            # hashes fork from the bitwise engine (documented + tested).
+            digest = mining.digest_tree(params, axis_name=axis_name)
+            divergence = aggregation.client_divergence_psum(
+                params, axis_name, n_shards)
+            extra = {}
+            if spec.detect_lazy:
+                det_full = (aggregation.client_all_gather(params, axis_name)
+                            if full is None
+                            else jax.lax.optimization_barrier(full))
+                prev_full = aggregation.client_all_gather(prev_params,
+                                                          axis_name)
+                suspects, _ = detection.detect_lazy_round(
+                    det_full, prev_full, threshold_frac=spec.detect_threshold)
+                extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
+            if kind == topology_lib.PSUM:
+                params = aggregation.mix_psum(params, psum_weights,
+                                              axis_name=axis_name,
+                                              n_shards=n_shards)
+            else:
+                w = topo.matrix(spec.n_clients, key=k_topo,
+                                round_idx=round_idx)
+                params = aggregation.mix_psum_dense(params, w, weights,
+                                                    axis_name=axis_name,
+                                                    n_shards=n_shards)
+            return params, digest, divergence, extra
         if full is None:
             full = aggregation.client_all_gather(params, axis_name)
         else:

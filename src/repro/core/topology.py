@@ -37,6 +37,16 @@ fallback). The lowered paths live in ``core/aggregation`` and reproduce
 their dense twins bit for bit — see that module's docstring for why the
 fp32 association is pinned.
 
+One kind opts out of that contract: asked with ``fast_allreduce=True``
+(``RoundSpec.fast_allreduce``), ``FullMesh`` — and any deterministic
+topology whose mixing matrix has uniform rows (:meth:`Topology.uniform_row`)
+— advertises ``psum`` instead: a true in-mesh ``lax.psum`` of locally
+pre-weighted rows (``aggregation.mix_psum``) that moves ~C/D× less data but
+reassociates fp32. Dense non-uniform matrices keep the ``gather`` kind and
+the engine routes them through ``aggregation.mix_psum_dense`` under the
+same flag. Both live under the tolerance equivalence tier
+(docs/architecture.md §The tolerance tier), not the bitwise one.
+
 Schedules (time-varying topologies)
 -----------------------------------
 
@@ -71,6 +81,12 @@ import numpy as np
 ALL_REDUCE = "all_reduce"
 NEIGHBOR_PERMUTE = "neighbor_permute"
 GATHER = "gather"
+# Opt-in fast-not-bitwise kind: a true in-mesh psum of locally pre-weighted
+# rows (aggregation.mix_psum). Only advertised when the engine asks with
+# fast_allreduce=True — it reassociates fp32, so it lives under the
+# tolerance equivalence tier, not the bitwise contract
+# (docs/architecture.md §The tolerance tier).
+PSUM = "psum"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +94,9 @@ class MixLowering:
     """How a topology's mix executes on a client-sharded mesh.
 
     ``kind`` is one of :data:`ALL_REDUCE`, :data:`NEIGHBOR_PERMUTE`,
-    :data:`GATHER`. ``offsets``/``weight`` are only populated for
+    :data:`GATHER`, :data:`PSUM` (the opt-in fast-not-bitwise all-reduce,
+    only returned when ``lowering`` is asked with ``fast_allreduce=True``).
+    ``offsets``/``weight`` are only populated for
     ``neighbor_permute``: client ``i`` adopts
     ``weight * sum_off model[(i + off) % C]``, accumulated in the fixed
     ``offsets`` order (the order is part of the contract — it pins the fp32
@@ -95,7 +113,11 @@ class MixLowering:
     (-1, 0, 1)
     >>> FullMesh().lowering(8).kind
     'all_reduce'
+    >>> FullMesh().lowering(8, fast_allreduce=True).kind
+    'psum'
     >>> RandomGraph(p_link=0.5).lowering(8).kind
+    'gather'
+    >>> RandomGraph(p_link=0.5).lowering(8, fast_allreduce=True).kind
     'gather'
     >>> GossipRotation().lowering(4).offsets_table
     ((0, 1), (0, 2), (0, 3))
@@ -133,10 +155,38 @@ class Topology:
     def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
         raise NotImplementedError
 
-    def lowering(self, n_clients: int) -> MixLowering:
+    def uniform_row(self, n_clients: int):
+        """The shared row ``r`` when every round's ``W`` has identical rows
+        (``W = 1 rᵀ``), else None. Such a mix is rank-1 — every client adopts
+        the same r-weighted average — so under ``fast_allreduce`` it lowers
+        to a true psum of locally pre-weighted rows (O(1) models moved per
+        device instead of O(C)). Host-side, deterministic topologies only."""
+        if self.stochastic:
+            return None
+        try:
+            if isinstance(self, Schedule):
+                mats = [np.asarray(self.matrix_at(t, n_clients))
+                        for t in range(self.period(n_clients))]
+            else:
+                mats = [np.asarray(self.matrix(n_clients))]
+        except NotImplementedError:
+            return None
+        row = mats[0][0]
+        for m in mats:
+            if not (m == row[None, :]).all():
+                return None
+        return row
+
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
         """The mesh execution strategy for this topology's mix (see module
         docstring). Default: the masked all-gather fallback, correct for any
-        row-stochastic ``W``."""
+        row-stochastic ``W``. With ``fast_allreduce=True`` a deterministic
+        topology whose rows are uniform (see :meth:`uniform_row`) advertises
+        the reassociating :data:`PSUM` kind instead — tolerance tier, not
+        bitwise."""
+        if fast_allreduce and self.uniform_row(n_clients) is not None:
+            return MixLowering(kind=PSUM)
         return MixLowering(kind=GATHER)
 
 
@@ -157,8 +207,14 @@ class FullMesh(Topology):
     def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
         return jnp.full((n_clients, n_clients), 1.0 / n_clients, jnp.float32)
 
-    def lowering(self, n_clients: int) -> MixLowering:
-        """One weighted all-reduce over the client axis (= ``fedavg``)."""
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
+        """One weighted all-reduce over the client axis (= ``fedavg``).
+        Opted into ``fast_allreduce``, the gather-side all-reduce becomes a
+        true in-mesh ``lax.psum`` (:data:`PSUM`) — ~C/D× less data moved,
+        fp32 reassociated (tolerance tier)."""
+        if fast_allreduce:
+            return MixLowering(kind=PSUM)
         return MixLowering(kind=ALL_REDUCE)
 
 
@@ -183,11 +239,13 @@ class Ring(Topology):
                 w[i, (i + off) % n_clients] = 1.0
         return jnp.asarray(w / w.sum(axis=1, keepdims=True))
 
-    def lowering(self, n_clients: int) -> MixLowering:
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
         """Neighbor ``collective_permute`` halo when the window is distinct
         (``2·neighbors + 1 <= C``); otherwise the window wraps onto itself,
         the dedup'd :meth:`matrix` is authoritative, and the gather fallback
-        applies it."""
+        applies it. ``fast_allreduce`` is a no-op here — the halo already
+        moves O(window) data and stays bitwise."""
         window = 2 * self.neighbors + 1
         if window > n_clients:
             return MixLowering(kind=GATHER)
@@ -272,10 +330,12 @@ class PairShift(Topology):
             w[i, (i + self.shift) % n_clients] += 0.5
         return jnp.asarray(w)
 
-    def lowering(self, n_clients: int) -> MixLowering:
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
         """Self + one partner ``collective_permute`` (any shift — the halo
         generalizes to whole-block permutes, see
-        ``aggregation.mix_shift_halo``)."""
+        ``aggregation.mix_shift_halo``). Already O(1) and bitwise;
+        ``fast_allreduce`` changes nothing."""
         return MixLowering(kind=NEIGHBOR_PERMUTE,
                            offsets=(0, self.shift % n_clients), weight=0.5)
 
@@ -367,9 +427,11 @@ class GossipRotation(Schedule):
     def topology_at(self, t: int, n_clients: int) -> Topology:
         return PairShift(shift=self.shift_at(t, n_clients))
 
-    def lowering(self, n_clients: int) -> MixLowering:
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
         """Round-dependent ``neighbor_permute``: one offsets pair per phase,
-        dispatched by ``lax.switch`` on the round counter."""
+        dispatched by ``lax.switch`` on the round counter. Already O(1)
+        communication per round; ``fast_allreduce`` changes nothing."""
         table = tuple((0, self.shift_at(t, n_clients))
                       for t in range(self.period(n_clients)))
         return MixLowering(kind=NEIGHBOR_PERMUTE, weight=0.5,

@@ -62,7 +62,8 @@ def run_mlp(args) -> dict:
         n_lazy=blade.n_lazy, sigma2=blade.sigma2, dp_sigma=blade.dp_sigma,
         mine_attempts=allocation.mining_iterations(blade.beta),
         difficulty_bits=4, eval_every=args.eval_every,
-        topology=topology.from_name(args.topology))
+        topology=topology.from_name(args.topology),
+        fast_allreduce=args.fast_allreduce)
     key = jax.random.key(blade.seed)
     src = FLDataSource(key, blade.n_clients, blade.samples_per_client,
                        blade.dirichlet_alpha, seed=blade.seed)
@@ -88,6 +89,7 @@ def run_mlp(args) -> dict:
         "final_global_loss": hist[-1].get("global_loss"),
         "chain_valid": ledger.validate_chain(), "blocks": len(ledger.blocks),
         "devices": mesh.devices.size if mesh is not None else 1,
+        "fast_allreduce": spec.fast_allreduce,
         "wall_s": time.time() - t0,
         **spectral_fields(spec, run_key, blade.K),
     }
@@ -102,7 +104,8 @@ def run_arch_smoke(args) -> dict:
                             n_lazy=args.lazy, sigma2=args.sigma2,
                             mine_attempts=256, difficulty_bits=2,
                             eval_every=args.eval_every,
-                            topology=topology.from_name(args.topology))
+                            topology=topology.from_name(args.topology),
+                            fast_allreduce=args.fast_allreduce)
     src = LMDataSource(cfg, shape, args.clients, seed=args.seed)
     key = jax.random.key(args.seed)
     params = registry.init_model(key, cfg)
@@ -123,6 +126,7 @@ def run_arch_smoke(args) -> dict:
         "loss_curve": [h["global_loss"] for h in hist],
         "chain_valid": ledger.validate_chain(),
         "devices": mesh.devices.size if mesh is not None else 1,
+        "fast_allreduce": spec.fast_allreduce,
         "wall_s": time.time() - t0,
         **spectral_fields(spec, run_key, args.rounds),
     }
@@ -156,6 +160,11 @@ def main():
                          "snr[:period] (core/topology.py Schedules)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="global-loss eval stride (NaN on skipped rounds)")
+    ap.add_argument("--fast-allreduce", action="store_true",
+                    help="opt-in psum fast path for dense mixes: ~C/D x less "
+                         "data moved, fp32 reassociated — tolerance tier, "
+                         "ledger hashes fork from the bitwise engine (see "
+                         "docs/architecture.md)")
     ap.add_argument("--devices", type=int, default=0,
                     help="shard the client axis of the scan engine over this "
                          "many devices (0 = single-device; requires "

@@ -78,9 +78,17 @@ def scan_carry_plan(mesh: Mesh, n_clients: int,
     ``n_clients`` must divide evenly over the extent of ``client_axes`` —
     every shard carries the same static client block, which is what keeps
     the per-shard program identical (and the sharded scan bit-for-bit with
-    the single-device one)."""
+    the single-device one — or, under ``RoundSpec.fast_allreduce``, within
+    the tolerance tier: the psum lowerings slice per-shard weight/column
+    blocks by the same linearized shard index this layout defines, so they
+    too require the uniform block size validated here)."""
     from repro.sharding.specs import _extent
 
+    if not client_axes:
+        raise ValueError(
+            "client_axes must name at least one mesh axis (an empty tuple "
+            "would replicate the client axis and silently run every client "
+            "on every shard)")
     for a in client_axes:
         if a not in mesh.shape:
             raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")

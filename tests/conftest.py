@@ -1,11 +1,18 @@
 import os
+import re
 import sys
 
 import pytest
 
-# Tests must see the single real CPU device — never the dry-run's 512
-# placeholders (see launch/dryrun.py which sets XLA_FLAGS itself).
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+# Tests must never see the dry-run's 512 placeholder devices (see
+# launch/dryrun.py which sets XLA_FLAGS itself). Small host-device counts
+# ARE allowed: the CI multidevice lane runs the tolerance-tier suites under
+# XLA_FLAGS=--xla_force_host_platform_device_count=4 (docs/architecture.md
+# §The tolerance tier); tests that need >1 device skip themselves when the
+# flag is absent.
+_count = re.search(r"xla_force_host_platform_device_count=(\d+)",
+                   os.environ.get("XLA_FLAGS", ""))
+assert _count is None or int(_count.group(1)) <= 8, \
     "do not run tests with dry-run XLA_FLAGS"
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,122 @@
+"""Tolerance-tier equivalence helpers (docs/architecture.md §The tolerance
+tier).
+
+The repo has two equivalence tiers:
+
+  * **bitwise** — the default contract: sharded-vs-single-device runs agree
+    EXACTLY (``np.testing.assert_array_equal``; tests/test_multidevice_scan.py
+    pins it). Anything that might reassociate fp32 is forbidden on those
+    paths.
+  * **tolerance** — the opt-in tier for reassociating fast paths
+    (``RoundSpec.fast_allreduce``: psum mixes, psum'd diagnostics). Results
+    agree to float tolerance, not bit-for-bit, and ledger hashes are
+    EXPECTED to fork. Suites under this tier carry the ``tolerance`` pytest
+    marker (registered in pyproject.toml) and run in the CI multidevice lane
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+
+This module holds the composable assertion helpers every tolerance-tier
+suite shares: relative/absolute bounds (``assert_trees_close(rtol, atol)``)
+and an ULP bound (``ulp=``) for when "a few reassociated last bits" is the
+claim — ``ulp=0`` degenerates to the bitwise tier, which keeps one helper
+usable across both.
+
+Not a test module itself (no ``test_`` prefix); import it from tests:
+
+    from equivalence import assert_trees_close, ulp_diff
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+_INT_OF_FLOAT = {2: np.int16, 4: np.int32, 8: np.int64}
+
+
+def _ordered_ints(x: np.ndarray) -> np.ndarray:
+    """Map float bit patterns to integers whose ordering matches the floats'
+    (the standard two's-complement trick: negative floats, whose sign-bit
+    patterns sort backwards, are reflected below zero; ±0.0 both map to 0).
+    Adjacent representable floats map to adjacent integers, so integer
+    distance IS distance in units-in-the-last-place."""
+    int_t = _INT_OF_FLOAT[x.dtype.itemsize]
+    bits = x.view(int_t)
+    min_int = np.iinfo(int_t).min
+    return np.where(bits < 0, min_int - bits, bits).astype(np.int64)
+
+
+def ulp_diff(got, want) -> np.ndarray:
+    """Element-wise distance in units-in-the-last-place between two same-dtype
+    float arrays. 0 = bitwise equal (also for ±0.0 pairs); 1 = adjacent
+    representable floats. NaNs compare equal to NaNs of the same bit pattern
+    only — a NaN against a finite value is a huge ULP distance, which is what
+    an equivalence assertion wants.
+
+    float64 ordered ints span the full int64 range, so an opposite-sign pair
+    can overflow the int64 subtraction; such pairs saturate to int64 max
+    instead of wrapping (a wrapped distance could read as "close" for two
+    maximally distant values, silently passing the assertion)."""
+    got, want = np.asarray(got), np.asarray(want)
+    if got.dtype != want.dtype:
+        raise TypeError(f"dtype mismatch: {got.dtype} vs {want.dtype}")
+    if not np.issubdtype(got.dtype, np.floating):
+        raise TypeError(f"ulp_diff needs float arrays, got {got.dtype}")
+    ka, kb = _ordered_ints(got), _ordered_ints(want)
+    with np.errstate(over="ignore"):
+        d = ka - kb
+    # wrap is only possible when the signs differ and flips the result's
+    # sign away from ka's; |int64 min| also wraps under abs
+    overflow = ((ka >= 0) != (kb >= 0)) & ((d >= 0) != (ka >= 0))
+    with np.errstate(over="ignore"):
+        d = np.abs(d)
+    overflow |= d < 0
+    return np.where(overflow, np.iinfo(np.int64).max, d)
+
+
+def assert_leaves_close(got, want, *, rtol: float = 1e-5, atol: float = 0.0,
+                        ulp: Optional[int] = None, err_msg: str = ""):
+    """One-leaf assertion: ULP tier when ``ulp`` is given (float dtypes),
+    rtol/atol tier otherwise. NaNs must match NaNs in both tiers (the
+    engine's strided eval emits NaN rows by design)."""
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape, \
+        f"{err_msg}: shape {got.shape} != {want.shape}"
+    if ulp is not None and np.issubdtype(want.dtype, np.floating):
+        d = ulp_diff(got, want)
+        worst = int(d.max()) if d.size else 0
+        assert worst <= ulp, (
+            f"{err_msg}: max ULP distance {worst} > allowed {ulp} "
+            f"({int((d > ulp).sum())}/{d.size} elements over)")
+    else:
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol,
+                                   equal_nan=True, err_msg=err_msg)
+
+
+def assert_trees_close(got, want, *, rtol: float = 1e-5, atol: float = 0.0,
+                       ulp: Optional[int] = None):
+    """Pytree-wide tolerance assertion: identical treedefs, then every leaf
+    pair through :func:`assert_leaves_close`. ``rtol``/``atol`` follow
+    ``np.testing.assert_allclose`` semantics; ``ulp`` switches float leaves
+    to the units-in-the-last-place tier (``ulp=0`` = bitwise)."""
+    got_paths = jax.tree_util.tree_flatten_with_path(got)
+    want_paths = jax.tree_util.tree_flatten_with_path(want)
+    assert got_paths[1] == want_paths[1], (
+        f"tree structure mismatch: {got_paths[1]} vs {want_paths[1]}")
+    for (path, g), (_, w) in zip(got_paths[0], want_paths[0]):
+        assert_leaves_close(g, w, rtol=rtol, atol=atol, ulp=ulp,
+                            err_msg=jax.tree_util.keystr(path))
+
+
+def tree_max_ulp(got, want) -> int:
+    """Largest per-leaf ULP distance across two float pytrees — the
+    diagnostic companion to ``assert_trees_close(ulp=...)`` for picking a
+    bound or reporting drift."""
+    leaves_g = jax.tree.leaves(got)
+    leaves_w = jax.tree.leaves(want)
+    worst = 0
+    for g, w in zip(leaves_g, leaves_w):
+        d = ulp_diff(g, w)
+        if d.size:
+            worst = max(worst, int(d.max()))
+    return worst

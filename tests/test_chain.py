@@ -54,6 +54,53 @@ def test_wrong_prev_hash_rejected():
                                     winner=0, nonce=0, pow_hash=0))
 
 
+def stacked_fields(n=5):
+    """Honest stacked scan outputs (what run_blade_fl_scan hands to
+    ledger_from_scan): low pow hashes so a difficulty target can be
+    enforced."""
+    digests = [1000 + i for i in range(n)]
+    winners = [i % 3 for i in range(n)]
+    nonces = [42 + i for i in range(n)]
+    pow_hashes = [7 + i for i in range(n)]
+    return digests, winners, nonces, pow_hashes
+
+
+def test_ledger_from_scan_happy_path_validates():
+    led = chain.ledger_from_scan(*stacked_fields(),
+                                 ledger=chain.Ledger(difficulty_bits=16))
+    assert led.validate_chain() and len(led.blocks) == 5
+
+
+def test_ledger_from_scan_rejects_flipped_pow_bit():
+    """A single flipped bit in a stacked header field must not replay into a
+    valid chain: flipping a high bit of one pow_hash pushes it past the
+    difficulty target and Ledger.append (which re-validates every block)
+    raises — the scan path keeps the same tamper resistance as the
+    per-round driver."""
+    digests, winners, nonces, pow_hashes = stacked_fields()
+    pow_hashes[2] ^= 1 << 31                       # one bit, now > target
+    with pytest.raises(ValueError, match="invalid block"):
+        chain.ledger_from_scan(digests, winners, nonces, pow_hashes,
+                               ledger=chain.Ledger(difficulty_bits=16))
+
+
+def test_ledger_from_scan_flipped_digest_bit_forks_every_downstream_link():
+    """ledger_from_scan re-derives prev_hash links, so a flipped digest bit
+    cannot silently coexist with the honest chain: the tampered replay
+    produces a different header hash at the flipped block and at EVERY
+    block after it, and grafting the tampered block into the honest chain
+    fails validate_chain."""
+    digests, winners, nonces, pow_hashes = stacked_fields()
+    honest = chain.ledger_from_scan(digests, winners, nonces, pow_hashes)
+    digests[1] ^= 1                                # single flipped bit
+    tampered = chain.ledger_from_scan(digests, winners, nonces, pow_hashes)
+    assert honest.blocks[0].header_hash == tampered.blocks[0].header_hash
+    for h, t in zip(honest.blocks[1:], tampered.blocks[1:]):
+        assert h.header_hash != t.header_hash
+    grafted = honest.tampered_copy(1, model_digest=digests[1])
+    assert not grafted.validate_chain()
+
+
 def test_header_hash_deterministic():
     b1 = chain.make_block(0, 1, 2, 3, 4, 5)
     b2 = chain.make_block(0, 1, 2, 3, 4, 5)

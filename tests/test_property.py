@@ -163,6 +163,35 @@ def test_mix_full_mesh_equals_fedavg_on_random_pytrees(c, seed, n_leaves,
                                    atol=1e-5)
 
 
+@settings(max_examples=20, deadline=None)
+@given(c=st.sampled_from([2, 4, 6, 8]), shift=st.integers(0, 25),
+       seed=st.integers(0, 1000))
+def test_shift_halo_rolls_and_dense_mix_agree(c, shift, seed):
+    """For ANY static shift s (wrapping included: s >= C) and client count,
+    the three PairShift mix forms agree: the sharded block-ppermute halo
+    (`mix_shift_halo` under shard_map) is BITWISE the dense roll form
+    (`mix_rolls`), and both match the dense matrix mix (`aggregation.mix`
+    with PairShift(s).matrix) to float tolerance (matmul reassociates)."""
+    import jax.experimental.shard_map as shard_map_lib
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import topology
+
+    x = jax.random.normal(jax.random.key(seed), (c, 3, 2))
+    p = {"w": x}
+    offsets = (0, shift)
+    rolls = aggregation.mix_rolls(p, offsets, 0.5)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    halo = jax.jit(shard_map_lib.shard_map(
+        lambda q: aggregation.mix_shift_halo(q, offsets, 0.5, "data"),
+        mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+        check_rep=False))(p)
+    np.testing.assert_array_equal(np.asarray(halo["w"]),
+                                  np.asarray(rolls["w"]))
+    dense = aggregation.mix(p, topology.PairShift(shift=shift).matrix(c))
+    np.testing.assert_allclose(np.asarray(rolls["w"]),
+                               np.asarray(dense["w"]), atol=1e-6)
+
+
 @settings(**SETTINGS)
 @given(c=st.integers(2, 12), seed=st.integers(0, 1000),
        ring_k=st.integers(1, 4), p_link=st.floats(0.0, 1.0))

@@ -496,3 +496,65 @@ def test_eval_every_final_loss_reaches_best_k_selection():
     assert math.isfinite(res["final_loss"])
     assert math.isfinite(res["loss_curve"][-1])   # last round evaluated
 
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-schedule replay: rounds.topology_keys reproduces the engine's
+# actual per-round W draws
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", [
+    topology.RandomGraph(p_link=0.6),
+    topology.AlternatingSchedule(
+        ((topology.RandomGraph(p_link=0.5), 1), (topology.FullMesh(), 1))),
+], ids=_ids)
+def test_topology_keys_replays_engine_draws(topo):
+    """``rounds.topology_keys(run_key, K)`` must regenerate the EXACT k_topo
+    stream the engine folds per round (the contract spectral.gap_report's
+    stochastic diagnostics rely on): rebuilding the run host-side — the
+    local-train stage alternated with ``aggregation.mix`` of the replayed
+    matrices — reproduces the engine's end-of-run params on the loop driver,
+    the scan driver, AND the sharded scan driver. A deliberately shifted key
+    stream draws different graphs and visibly diverges."""
+    from jax.sharding import Mesh
+
+    c, k_rounds = 6, 4
+    key = jax.random.key(21)
+    src = FLDataSource(key, c, samples_per_client=8, seed=21)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    batch = src.static_batch()
+    run_key = jax.random.fold_in(key, 2)
+    spec = rounds.RoundSpec(n_clients=c, tau=1, eta=0.1, mine_attempts=8,
+                            difficulty_bits=0, topology=topo)
+    st_loop, _, _ = rounds.run_blade_fl(mlp_loss, spec, params,
+                                        lambda k: batch, run_key, k_rounds)
+    st_scan, _, _ = rounds.run_blade_fl_scan(mlp_loss, spec, params, batch,
+                                             run_key, k_rounds)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    st_shard, _, _ = rounds.run_blade_fl_scan(mlp_loss, spec, params, batch,
+                                              run_key, k_rounds, mesh=mesh)
+
+    local_train = jax.jit(rounds.make_local_train(mlp_loss, spec))
+
+    def replay(keys):
+        p = aggregation.replicate(params, c)
+        for k, k_topo in enumerate(keys):
+            p, _ = local_train(p, batch)
+            w = topo.matrix(c, key=k_topo, round_idx=jnp.int32(k))
+            p = aggregation.mix(p, w)
+        return p
+
+    expect = replay(rounds.topology_keys(run_key, k_rounds))
+    for got in (st_loop.params, st_scan.params, st_shard.params):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+    # negative control: a shifted key stream must not reproduce the run —
+    # otherwise this test could not tell right draws from wrong ones
+    wrong = replay(rounds.topology_keys(jax.random.fold_in(run_key, 9),
+                                        k_rounds))
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+        for a, b in zip(jax.tree.leaves(st_scan.params),
+                        jax.tree.leaves(wrong)))
