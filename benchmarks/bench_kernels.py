@@ -8,7 +8,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.core import aggregation, mining

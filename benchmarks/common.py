@@ -10,7 +10,6 @@ import time
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import allocation, bounds, rounds
 from repro.core.aggregation import aggregate_once

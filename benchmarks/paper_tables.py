@@ -6,7 +6,6 @@ Datasets: the synthetic MNIST/Fashion proxies (offline container).
 """
 from __future__ import annotations
 
-import json
 from typing import Dict, List
 
 import numpy as np

@@ -87,7 +87,6 @@ def fedavg(params, weights: Optional[jnp.ndarray] = None):
     """
 
     def one(leaf):
-        c = leaf.shape[0]
         if weights is None:
             agg = jnp.mean(leaf.astype(jnp.float32), axis=0)
         else:
@@ -168,7 +167,8 @@ def client_all_gather(tree, axis_name: AxisName):
 
     The ``optimization_barrier`` (applied in BOTH modes) is load-bearing for
     the bitwise contract: downstream full reductions to a scalar (the model
-    digest's per-leaf sum, ``global_loss``/``local_loss_mean`` means, the
+    digest's per-leaf sum, the per-client ``global_loss``/``local_loss``
+    vectors the drivers ``np.mean`` on host, the
     divergence diagnostic) are vectorized by XLA:CPU with lane-partial
     accumulators whose association can change with the fusion context. The
     barrier pins the reduction input to a materialized buffer in the sharded

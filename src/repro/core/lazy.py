@@ -8,8 +8,6 @@ leading axis lowers to a collective-permute-like exchange over 'data'.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,8 +15,10 @@ import numpy as np
 
 def plagiarism_sources(n_clients: int, n_lazy: int) -> np.ndarray:
     """source[i] = client whose weights client i ends up holding."""
-    assert 0 <= n_lazy < n_clients or (n_lazy == n_clients == 0), \
-        "need at least one honest client when anyone is lazy"
+    if not (0 <= n_lazy < n_clients or (n_lazy == n_clients == 0)):
+        raise ValueError(
+            f"n_lazy={n_lazy}, n_clients={n_clients}: need at least one "
+            "honest client when anyone is lazy")
     src = np.arange(n_clients)
     n_honest = n_clients - n_lazy
     for i in range(n_lazy):

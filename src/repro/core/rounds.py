@@ -254,7 +254,13 @@ def make_local_train(loss_fn: LossFn, spec: RoundSpec, n_shards: int = 1):
     def local_train(params, batch):
         def local_iter(_, carry):
             p, _ = carry
-            losses, grads = per_client_grad(p, batch)
+            # pin the iteration inputs: without this, XLA fuses the
+            # batch-mean inside value_and_grad with whatever surrounds the
+            # loop (the scan engine peels its first iteration), and the
+            # materialized per-client loss drifts a ULP between the scan
+            # and per-round engines on lane-vectorized CPU builds
+            p, b = jax.lax.optimization_barrier((p, batch))
+            losses, grads = per_client_grad(p, b)
             p = jax.tree.map(lambda w, g: w - spec.eta * g.astype(w.dtype),
                              p, grads)
             return (p, losses)
@@ -604,8 +610,11 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
             full=broadcast_full)
         mine_metrics, new_hash = mine(state.prev_hash, digest, state.round_idx)
 
+        # per-client [C] vector; the drivers np.mean it on host — a device
+        # `jnp.mean` here is a fusion-context-sensitive scalar reduce over
+        # the gathered axis (same discipline as global_loss, RL301)
         local_losses = aggregation.client_all_gather(local_losses, axis_name)
-        metrics = {"local_loss_mean": jnp.mean(local_losses), **mine_metrics,
+        metrics = {"local_loss": local_losses, **mine_metrics,
                    "digest": digest, "divergence": divergence, **extra}
         return finalize(state, params, key, new_hash, batch, metrics)
 
@@ -713,11 +722,14 @@ def run_blade_fl_scan(loss_fn: LossFn, spec: RoundSpec, params_single, batch,
     state = init_state(params_single, key, spec.n_clients)
     state, stacked_metrics = runner(state, batch)
     host = jax.device_get(stacked_metrics)   # the one host transfer
-    # the engine emits per-client eval losses [K, C]; the scalar
-    # global_loss is reduced here on host (see make_finalize)
+    # the engine emits per-client losses [K, C]; the scalar means are
+    # reduced here on host (see make_finalize / make_integrated_round)
     glosses = host.pop("global_loss", None)
+    llosses = host.pop("local_loss")
     history = [{name: float(v[k]) for name, v in host.items()}
                for k in range(int(n_rounds))]
+    for k in range(int(n_rounds)):
+        history[k]["local_loss_mean"] = float(np.mean(llosses[k]))
     if glosses is not None:
         for k in range(int(n_rounds)):
             history[k]["global_loss"] = float(np.mean(glosses[k]))
@@ -773,9 +785,11 @@ def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
         ledger.append(block)
         metrics = dict(metrics)
         glosses = metrics.pop("global_loss", None)
+        llosses = metrics.pop("local_loss")
         entry = {k2: float(v) for k2, v in metrics.items()}
+        # identical host-side reductions to the scan driver's
+        entry["local_loss_mean"] = float(np.mean(np.asarray(llosses)))
         if glosses is not None:
-            # identical host-side reduction to the scan driver's
             entry["global_loss"] = float(np.mean(np.asarray(glosses)))
         history.append(entry)
     return state, history, ledger

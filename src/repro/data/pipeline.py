@@ -6,7 +6,7 @@ the dry-run's ShapeDtypeStructs match real batches bit-for-shape).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterator
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ the assigned-architecture smoke/e2e training runs.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -27,8 +27,6 @@ def fedavg_tree(params, weights=None, noise_tree=None, *, use_kernel: bool = Tru
         weights = weights / jnp.sum(weights)
     noise_leaves = (jax.tree.flatten(noise_tree)[0] if noise_tree is not None
                     else [None] * len(leaves))
-    fn = fedavg_flat if use_kernel else (
-        lambda x, w, n, **kw: fedavg_flat_ref(x, w, n))
     out = []
     for leaf, nz in zip(leaves, noise_leaves):
         flat = leaf.reshape(c, -1)

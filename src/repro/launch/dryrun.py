@@ -18,9 +18,6 @@ import json
 import time
 import traceback
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import INPUT_SHAPES, arch_ids, get_arch, get_shape
 from repro.launch import analysis, hlo_analysis, mesh as mesh_lib, steps
 

@@ -40,7 +40,8 @@ def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
 
     n = int(np.prod(shape))
     devices = jax.devices()
-    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 

@@ -5,8 +5,7 @@ jit-able step function + in/out shardings + abstract input specs for any
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +88,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     batch_sh = specs_lib.to_shardings(
         mesh, specs_lib.train_batch_pspecs(cfg, plan, batch_abs))
     metrics_sh = jax.tree.map(lambda _: specs_lib.replicated(mesh),
-                              {"local_loss_mean": 0, "winner": 0, "pow_hash": 0,
+                              {"local_loss": 0, "winner": 0, "pow_hash": 0,
                                "nonce": 0, "solved": 0, "digest": 0,
                                "divergence": 0})
 

@@ -26,10 +26,9 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
-from repro.core import allocation, bounds, chain, rounds, spectral, topology
+from repro.core import allocation, rounds, spectral, topology
 from repro.data.pipeline import FLDataSource, LMDataSource
 from repro.launch.mesh import make_client_mesh
 from repro.models import registry

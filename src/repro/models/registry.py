@@ -10,7 +10,6 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer
@@ -80,7 +79,9 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16,
     """Training batch specs. With n_clients > 1 the batch carries a leading
     client axis [C, B/C, ...] (BLADE-FL: clients own disjoint local data)."""
     b, s = shape.global_batch, shape.seq_len
-    assert b % n_clients == 0, (b, n_clients)
+    if b % n_clients != 0:
+        raise ValueError(
+            f"global_batch={b} must divide evenly over n_clients={n_clients}")
     lead = (n_clients, b // n_clients) if n_clients > 1 else (b,)
     if cfg.family == "vlm":
         p = cfg.vlm_prefix_len

@@ -242,7 +242,6 @@ def _slstm_step(params, cfg, carry, u_t):
     Used by decode; the full-sequence path precomputes the input projections
     (time-parallel) and scans only the recurrent part (_slstm_step_rec)."""
     xcfg, d_in, hd = _dims(cfg)
-    b = u_t.shape[0]
     proj = jnp.stack([u_t @ params["w_z"], u_t @ params["w_i"],
                       u_t @ params["w_f"], u_t @ params["w_o"]], axis=1)
     return _slstm_step_rec(params, cfg, carry, proj)
@@ -304,7 +303,7 @@ def slstm_forward(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray
 
 def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     x, d_in, hd = _dims(cfg)
-    z3 = lambda: jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)
+    z3 = lambda: jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)  # noqa: E731
     return {
         "c": z3(), "n": z3(),
         "m": jnp.full((batch, cfg.n_heads, hd), -1e30, jnp.float32),

@@ -18,13 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,7 +56,10 @@ def restore(directory: str, template: Any, step: Optional[int] = None
     leaves = []
     for p, tmpl in flat:
         arr = data[_path_str(p)]
-        assert arr.shape == tmpl.shape, (p, arr.shape, tmpl.shape)
+        if arr.shape != tmpl.shape:
+            raise ValueError(
+                f"checkpoint leaf {_path_str(p)}: stored shape {arr.shape} "
+                f"does not match template shape {tmpl.shape}")
         leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     meta_path = os.path.join(directory, name.replace(".npz", ".json"))

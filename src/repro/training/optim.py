@@ -8,7 +8,6 @@ centralized baseline the paper compares against).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

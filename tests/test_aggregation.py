@@ -1,8 +1,6 @@
 """Decentralized aggregation (Steps 2+5) — pure-jnp path and Pallas kernel."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import aggregation
 from repro.kernels.fedavg import fedavg_tree

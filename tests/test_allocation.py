@@ -1,6 +1,4 @@
 """Eq. (3) resource-allocation accounting."""
-import pytest
-
 from repro.core import allocation, bounds
 
 

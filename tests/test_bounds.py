@@ -1,7 +1,6 @@
 """Theorems 1-4 + Corollaries 1-5: bound math validated numerically."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core import allocation, bounds

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ShapeConfig, get_smoke_arch
-from repro.core import allocation, bounds, rounds
+from repro.core import allocation, rounds
 from repro.data.pipeline import FLDataSource, LMDataSource
 from repro.models import registry, transformer
 from repro.models.mlp import init_mlp, mlp_loss

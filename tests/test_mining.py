@@ -1,5 +1,4 @@
 """PoW simulation (§2.2/§3.1 Step 3)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

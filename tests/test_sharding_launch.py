@@ -8,11 +8,10 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import INPUT_SHAPES, arch_ids, get_arch, get_smoke_arch
+from repro.configs import INPUT_SHAPES, arch_ids, get_arch
 from repro.launch import analysis, hlo_analysis, steps
 from repro.models import registry
 from repro.sharding import plans, specs
@@ -139,8 +138,8 @@ def test_multidevice_fl_semantics_subprocess():
                   for a, b in zip(jax.tree.leaves(ref_state.params),
                                   jax.tree.leaves(out_state.params)))
         print(json.dumps({"err": err,
-                          "loss_ref": float(ref_m["local_loss_mean"]),
-                          "loss_sh": float(out_m["local_loss_mean"])}))
+                          "loss_ref": float(np.mean(np.asarray(ref_m["local_loss"]))),
+                          "loss_sh": float(np.mean(np.asarray(out_m["local_loss"])))}))
     """)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC

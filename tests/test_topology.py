@@ -413,7 +413,7 @@ def test_default_topology_bit_for_bit_with_explicit_full_mesh():
     params = init_mlp(jax.random.fold_in(key, 1))
     kw = dict(n_clients=4, tau=2, eta=0.1, n_lazy=1, sigma2=0.02,
               dp_sigma=0.1, mine_attempts=64)
-    run = lambda spec: rounds.run_blade_fl(
+    run = lambda spec: rounds.run_blade_fl(  # noqa: E731
         mlp_loss, spec, params, src.static_batch(),
         jax.random.fold_in(key, 2), 3)
     _, hist_default, led_a = run(rounds.RoundSpec(**kw))

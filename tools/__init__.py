@@ -1,0 +1,3 @@
+"""Repo tooling (doc-link checker, repro-lint). Import as ``tools.*`` with the
+repo root on ``sys.path``; nothing here imports jax, so the CI lint lane runs
+on a bare Python."""

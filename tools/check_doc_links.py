@@ -6,6 +6,9 @@ Scans README.md and docs/*.md for markdown links and inline code paths:
   * relative links must resolve to an existing file/dir (anchors stripped);
   * bare `path/to/file.py` references in backticks must exist too, so the
     architecture/paper-map tables can't silently rot as modules move;
+  * `core/rounds.make_local_train`-style symbol citations (paper_map.md's
+    anchor format) must resolve to a real module symbol, via the same AST
+    walk repro-lint uses (tools/repro_lint/symbols.py);
   * external http(s) links are skipped (checking them needs network).
 
 Exit code 1 with a per-file report when anything dangles.
@@ -19,12 +22,23 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+
+from tools.repro_lint.symbols import build_index  # noqa: E402
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # `src/...py` / `tests/...py` / `benchmarks/...py` / `docs/...md` style
 # backtick references; a trailing path component is enough to check.
 CODE_PATH = re.compile(
     r"`((?:src|tests|benchmarks|docs|examples|tools)/[\w./-]+\.(?:py|md|yml))`")
+# `core/rounds.make_local_train` / `core/chain.Ledger.append` /
+# `core/bounds.g_of_k(M=256, ...)` style symbol citations: a repo module
+# path (no extension) dotted into a symbol chain, optional call suffix.
+SYMBOL_REF = re.compile(
+    r"`((?:core|sharding|launch|models|data|training|kernels|configs"
+    r"|benchmarks|examples|tools)/[\w/]+)"
+    r"\.([A-Za-z_]\w*(?:\.[A-Za-z_]\w*)*)(?:\([^`]*\))?`")
+_EXTENSIONS = {"py", "md", "yml", "yaml", "json", "txt", "toml", "sh"}
 
 
 def doc_files():
@@ -36,7 +50,22 @@ def doc_files():
                 yield os.path.join(docs, name)
 
 
-def check_file(path: str) -> list[str]:
+def check_symbol_ref(module: str, symbols: str, index) -> str | None:
+    """Return an error string when `module.symbols` doesn't resolve."""
+    if module not in index:
+        return f"dangling symbol ref: `{module}.{symbols}` (no such module)"
+    parts = symbols.split(".")
+    have = index[module]
+    if parts[0] not in have:
+        return (f"dangling symbol ref: `{module}.{symbols}` "
+                f"({parts[0]} not defined in {module})")
+    if len(parts) > 1 and ".".join(parts[:2]) not in have:
+        return (f"dangling symbol ref: `{module}.{symbols}` "
+                f"({parts[0]}.{parts[1]} not defined in {module})")
+    return None
+
+
+def check_file(path: str, index) -> list[str]:
     base = os.path.dirname(path)
     text = open(path, encoding="utf-8").read()
     errors = []
@@ -54,13 +83,20 @@ def check_file(path: str) -> list[str]:
     for target in set(CODE_PATH.findall(text)):
         if not os.path.exists(os.path.join(ROOT, target)):
             errors.append(f"dangling code path: {target}")
+    for module, symbols in sorted(set(SYMBOL_REF.findall(text))):
+        if symbols.split(".")[0] in _EXTENSIONS:
+            continue  # a file path like `docs/paper_map.md`, not a symbol
+        err = check_symbol_ref(module, symbols, index)
+        if err:
+            errors.append(err)
     return errors
 
 
 def main() -> int:
     failed = False
+    index = build_index(ROOT)
     for path in doc_files():
-        errors = check_file(path)
+        errors = check_file(path, index)
         rel = os.path.relpath(path, ROOT)
         if errors:
             failed = True

@@ -1,0 +1,16 @@
+"""repro-lint: AST checks for this repo's JAX tracing/sharding/fp32
+contracts (docs/architecture.md §Static contracts).
+
+CLI: ``python -m tools.repro_lint [paths ...]`` — exits 1 on any finding
+not waived by ``tools/repro_lint/baseline.json`` or an inline
+``# repro-lint: disable=RLxxx`` comment. Pure stdlib; never imports jax.
+"""
+from tools.repro_lint.engine import (  # noqa: F401
+    Finding,
+    apply_baseline,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    main,
+)
+from tools.repro_lint.registry import RULES  # noqa: F401

@@ -1,0 +1,150 @@
+"""Traced-scope inference shared by every repro-lint rule.
+
+The engine (see docs/architecture.md) traces Python functions exactly once
+and replays the jaxpr; code that is correct at trace time but wrong at run
+time (host entropy, asserts on traced values, device-side scalar reduces)
+is invisible to unit tests that happen to hit the same trace. The rules
+therefore need a static, conservative answer to "does this code run under
+``jax.jit``/``lax.scan`` tracing?". We say a function is *traced* when:
+
+* it is decorated with a tracing transform (``@jax.jit``, ``@jax.checkpoint``,
+  ``@pl.when(...)``, ``functools.partial(jax.jit, ...)``), or
+* it is passed by name (or inline ``lambda``) to a transform call —
+  ``lax.scan``/``cond``/``switch``/``while_loop``/``fori_loop``,
+  ``jax.jit``/``vmap``/``grad``/``value_and_grad``, ``shard_map``,
+  ``pl.pallas_call`` — anywhere in the module, or
+* it is nested (at any depth) inside a ``make_*``/``build_*`` stage factory
+  (the repo-wide convention: factories close over static config and return
+  functions that run under the scan; ``core/rounds.py``), or
+* it is nested inside any function already deemed traced.
+
+This intentionally over-approximates (a helper shared by host and device
+paths counts as traced); suppressions exist for the rare deliberate case.
+Pure stdlib ``ast`` — no jax import, so the lint lane needs no JAX runtime.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# Callees whose function-valued arguments run under trace.
+TRANSFORM_CALLEES = frozenset({
+    "jit", "grad", "value_and_grad", "jacfwd", "jacrev", "hessian",
+    "vmap", "checkpoint", "remat", "custom_jvp", "custom_vjp",
+    "scan", "cond", "switch", "while_loop", "fori_loop", "associative_scan",
+    "map", "shard_map", "pallas_call",
+})
+
+# Decorator names that put the decorated body under trace. ``when`` is
+# ``pl.when(...)`` inside Pallas kernels.
+TRACED_DECORATORS = TRANSFORM_CALLEES | {"when"}
+
+FACTORY_PREFIXES = ("make_", "build_")
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.psum`` -> ``'psum'``; ``psum`` -> ``'psum'``; else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``np.random.normal`` -> ``'np.random.normal'`` (None if not a pure
+    dotted ``Name.attr.attr...`` chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class ScopeInfo:
+    """Parent links + the traced-function set for one module AST."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.parent = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self.functions = [n for n in ast.walk(tree)
+                          if isinstance(n, FUNC_NODES)]
+        directly_traced = set()
+        traced_names = set()
+        for call in (n for n in ast.walk(tree) if isinstance(n, ast.Call)):
+            callee = terminal_name(call.func)
+            argv = list(call.args) + [k.value for k in call.keywords]
+            if callee in TRANSFORM_CALLEES:
+                for arg in argv:
+                    if isinstance(arg, ast.Name):
+                        traced_names.add(arg.id)
+                    elif isinstance(arg, FUNC_NODES):
+                        directly_traced.add(arg)
+            elif callee == "partial" and any(
+                    terminal_name(a) in TRANSFORM_CALLEES for a in call.args):
+                # functools.partial(jax.jit, fn, ...) / partial(shard_map, f)
+                for arg in call.args[1:]:
+                    if isinstance(arg, ast.Name):
+                        traced_names.add(arg.id)
+        for fn in self.functions:
+            if isinstance(fn, ast.Lambda):
+                continue
+            if fn.name in traced_names:
+                directly_traced.add(fn)
+            for dec in fn.decorator_list:
+                head = dec.func if isinstance(dec, ast.Call) else dec
+                if terminal_name(head) in TRACED_DECORATORS:
+                    directly_traced.add(fn)
+                elif (isinstance(dec, ast.Call)
+                      and terminal_name(dec.func) == "partial"
+                      and any(terminal_name(a) in TRANSFORM_CALLEES
+                              for a in dec.args)):
+                    directly_traced.add(fn)
+        self._traced = set()
+        for fn in self.functions:
+            if fn in directly_traced or self._inherits_trace(
+                    fn, directly_traced):
+                self._traced.add(fn)
+
+    def _inherits_trace(self, fn, directly_traced) -> bool:
+        anc = self.parent.get(fn)
+        while anc is not None:
+            if isinstance(anc, FUNC_NODES):
+                if anc in directly_traced:
+                    return True
+                if (isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and anc.name.startswith(FACTORY_PREFIXES)):
+                    return True
+            anc = self.parent.get(anc)
+        return False
+
+    def enclosing_functions(self, node: ast.AST) -> Iterator[ast.AST]:
+        """Innermost-first chain of function nodes containing ``node``."""
+        anc = self.parent.get(node)
+        while anc is not None:
+            if isinstance(anc, FUNC_NODES):
+                yield anc
+            anc = self.parent.get(anc)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        return next(self.enclosing_functions(node), None)
+
+    def outermost_function(self, node: ast.AST) -> Optional[ast.AST]:
+        outer = None
+        for fn in self.enclosing_functions(node):
+            outer = fn
+        return outer
+
+    def is_traced(self, fn: ast.AST) -> bool:
+        return fn in self._traced
+
+    def in_traced_scope(self, node: ast.AST) -> bool:
+        return any(f in self._traced for f in self.enclosing_functions(node))

@@ -1,0 +1,188 @@
+"""repro-lint core: file discovery, suppressions, baseline, reporting.
+
+Findings are identified by ``(path, code)`` for baseline matching (line
+numbers shift as files are edited; the baseline grants each ``(path, code)``
+pair a fixed allowance and anything beyond it fails). Inline suppressions
+use ``# repro-lint: disable=RL101`` (comma-separate multiple codes) on the
+flagged line or on a comment line immediately above it.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import collections
+import dataclasses
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from tools.repro_lint.context import ScopeInfo
+from tools.repro_lint.registry import RULES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+DEFAULT_BASELINE = os.path.join(ROOT, "tools", "repro_lint", "baseline.json")
+DEFAULT_PATHS = ("src", "benchmarks")
+
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str   # repo-relative, posix separators
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule's ``check`` gets to look at for one module."""
+    path: str
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    scopes: ScopeInfo
+
+
+def _load_rules() -> None:
+    # Importing the package registers every rule module exactly once.
+    from tools.repro_lint import rules  # noqa: F401
+
+
+def _suppressed_codes(lines: List[str], line_no: int) -> set:
+    codes = set()
+    for idx in (line_no - 1, line_no - 2):  # the line itself, then the one above
+        if not 0 <= idx < len(lines):
+            continue
+        if idx == line_no - 2 and not lines[idx].strip().startswith("#"):
+            continue  # the preceding line must be a pure comment
+        m = SUPPRESS_RE.search(lines[idx])
+        if m:
+            codes.update(c.strip() for c in m.group(1).split(",") if c.strip())
+    return codes
+
+
+def lint_source(source: str, relpath: str) -> List[Finding]:
+    """Run every registered rule over one module's source text."""
+    _load_rules()
+    tree = ast.parse(source, filename=relpath)
+    ctx = FileContext(path=relpath, source=source, tree=tree,
+                      lines=source.splitlines(), scopes=ScopeInfo(tree))
+    findings = []
+    for r in RULES.values():
+        for line, message in r.check(ctx):
+            if r.code in _suppressed_codes(ctx.lines, line):
+                continue
+            findings.append(Finding(path=relpath, line=line, code=r.code,
+                                    message=message))
+    return sorted(findings)
+
+
+def iter_py_files(paths) -> List[Tuple[str, str]]:
+    """Resolve CLI path args to ``(abspath, repo-relative posix path)``."""
+    out = []
+    for p in paths:
+        absp = p if os.path.isabs(p) else os.path.join(ROOT, p)
+        if os.path.isfile(absp):
+            out.append(absp)
+            continue
+        for dirpath, dirnames, filenames in os.walk(absp):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__" and not d.startswith("."))
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    out.append(os.path.join(dirpath, name))
+    return [(a, os.path.relpath(a, ROOT).replace(os.sep, "/")) for a in out]
+
+
+def lint_paths(paths) -> List[Finding]:
+    findings = []
+    for abspath, relpath in iter_py_files(paths):
+        with open(abspath, encoding="utf-8") as fh:
+            source = fh.read()
+        findings.extend(lint_source(source, relpath))
+    return sorted(findings)
+
+
+def load_baseline(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh).get("findings", [])
+
+
+def apply_baseline(findings, baseline_entries):
+    """Split findings into (fresh, waived) and report stale allowances."""
+    allowance = collections.Counter(
+        (e["path"], e["code"]) for e in baseline_entries)
+    fresh, waived = [], []
+    for f in findings:
+        key = (f.path, f.code)
+        if allowance.get(key, 0) > 0:
+            allowance[key] -= 1
+            waived.append(f)
+        else:
+            fresh.append(f)
+    stale = {k: n for k, n in allowance.items() if n > 0}
+    return fresh, waived, stale
+
+
+def write_baseline(findings, path: str) -> None:
+    entries = [{"path": f.path, "line": f.line, "code": f.code}
+               for f in sorted(findings)]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"comment": "Known debt waived by repro-lint; regenerate "
+                              "with: python -m tools.repro_lint --write-baseline",
+                   "findings": entries}, fh, indent=2)
+        fh.write("\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="AST lint for this repo's JAX tracing/sharding/fp32 "
+                    "contracts (docs/architecture.md §Static contracts).")
+    parser.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                        help="files/dirs relative to the repo root "
+                             "(default: src benchmarks)")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline JSON of waived findings")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report baselined findings too")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="rewrite the baseline from the current tree")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    _load_rules()
+    if args.list_rules:
+        for code in sorted(RULES):
+            print(f"{code}  {RULES[code].summary}")
+        return 0
+
+    findings = lint_paths(args.paths)
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"wrote {len(findings)} finding(s) to "
+              f"{os.path.relpath(args.baseline, ROOT)}")
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(args.baseline)
+    fresh, waived, stale = apply_baseline(findings, baseline)
+    for f in fresh:
+        print(f)
+    for key, n in sorted(stale.items()):
+        print(f"warning: stale baseline entry {key[1]} x{n} for {key[0]} "
+              f"(regenerate with --write-baseline)")
+    print(f"repro-lint: {len(fresh)} finding(s), {len(waived)} baselined, "
+          f"{len(RULES)} rules")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

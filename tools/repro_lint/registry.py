@@ -1,0 +1,26 @@
+"""Rule registry. A rule is ``check(ctx) -> iterable[(line, message)]`` over
+one :class:`tools.repro_lint.engine.FileContext`, registered under a stable
+``RLxxx`` code used by suppressions and the baseline."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    check: Callable[["FileContext"], Iterable[Tuple[int, str]]]  # noqa: F821
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str):
+    def deco(fn):
+        if code in RULES:
+            raise ValueError(f"duplicate rule code {code}")
+        RULES[code] = Rule(code=code, summary=summary, check=fn)
+        return fn
+    return deco

@@ -1,0 +1,2 @@
+"""Rule modules register themselves on import (see registry.rule)."""
+from tools.repro_lint.rules import fp32, kernels, sharding, tracing  # noqa: F401

@@ -1,0 +1,125 @@
+"""RL3xx — fp32 association discipline.
+
+The bitwise contract (docs/architecture.md §The bitwise contract) rests on
+three association rules: gathered per-client values are reduced on the
+host, never to a device-side scalar; every gather goes through the
+``optimization_barrier``-pinned ``aggregation.client_all_gather``; window
+accumulations are raw sums scaled once at the end (FMA contraction moves
+bits otherwise).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.context import terminal_name
+from tools.repro_lint.registry import rule
+
+# --------------------------------------------------------------------------
+# RL301
+
+_SCALAR_REDUCERS = frozenset({
+    "mean", "sum", "std", "var", "max", "min", "prod", "median",
+})
+
+
+def _is_gather_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and terminal_name(node.func) == "client_all_gather")
+
+
+@rule("RL301", "device-side scalar reduction over gathered per-client [C] "
+               "values in traced code")
+def check_device_scalar_reduce(ctx):
+    for fn in ctx.scopes.functions:
+        if not ctx.scopes.is_traced(fn):
+            continue
+        gathered = set()
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and _is_gather_call(stmt.value):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        gathered.add(tgt.id)
+        for call in ast.walk(fn):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and call.func.attr in _SCALAR_REDUCERS):
+                continue
+            if len(call.args) != 1 or any(k.arg == "axis"
+                                          for k in call.keywords):
+                continue  # axis-wise reduce is fine; scalar collapse is not
+            arg = call.args[0]
+            is_gathered = _is_gather_call(arg) or (
+                isinstance(arg, ast.Name) and arg.id in gathered)
+            if is_gathered and ctx.scopes.in_traced_scope(call):
+                yield (call.lineno,
+                       f"`{call.func.attr}` collapses a client_all_gather'd "
+                       "[C] value to a device-side scalar inside traced "
+                       "code — the reduce order is fusion-context-sensitive; "
+                       "emit the per-client vector and np.mean on the host "
+                       "(docs/architecture.md §The bitwise contract)")
+
+
+# --------------------------------------------------------------------------
+# RL302
+
+
+@rule("RL302", "raw lax.all_gather without an optimization_barrier in the "
+               "enclosing function")
+def check_unpinned_gather(ctx):
+    for call in ast.walk(ctx.tree):
+        if not (isinstance(call, ast.Call)
+                and terminal_name(call.func) == "all_gather"):
+            continue
+        outer = ctx.scopes.outermost_function(call)
+        haystack = outer if outer is not None else ctx.tree
+        pinned = any(isinstance(n, ast.Call)
+                     and terminal_name(n.func) == "optimization_barrier"
+                     for n in ast.walk(haystack))
+        if not pinned:
+            yield (call.lineno,
+                   "raw `lax.all_gather` without `optimization_barrier`: "
+                   "XLA may fuse a scalar reduce across the gathered axis "
+                   "and reassociate the fp32 sum; use "
+                   "aggregation.client_all_gather (barrier-pinned) instead")
+
+
+# --------------------------------------------------------------------------
+# RL303
+
+
+def _contains_scaling(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.BinOp) and isinstance(n.op, (ast.Mult, ast.Div))
+               for n in ast.walk(node))
+
+
+@rule("RL303", "scaled accumulation inside a loop in traced code (raw-sum-"
+               "then-scale required)")
+def check_scaled_accumulation(ctx):
+    for loop in ast.walk(ctx.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        if not ctx.scopes.in_traced_scope(loop):
+            continue
+        for stmt in ast.walk(loop):
+            acc, contrib = None, None
+            if (isinstance(stmt, ast.AugAssign) and isinstance(stmt.op, ast.Add)
+                    and isinstance(stmt.target, ast.Name)):
+                acc, contrib = stmt.target.id, stmt.value
+            elif (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.BinOp)
+                    and isinstance(stmt.value.op, ast.Add)):
+                tgt = stmt.targets[0].id
+                left, right = stmt.value.left, stmt.value.right
+                if isinstance(left, ast.Name) and left.id == tgt:
+                    acc, contrib = tgt, right
+                elif isinstance(right, ast.Name) and right.id == tgt:
+                    acc, contrib = tgt, left
+            if acc is not None and contrib is not None \
+                    and _contains_scaling(contrib):
+                yield (stmt.lineno,
+                       f"loop accumulates `{acc} += <scaled term>` in traced "
+                       "code: XLA may contract the multiply-add into an FMA "
+                       "and move bits; accumulate raw sums and scale once "
+                       "after the loop (docs/architecture.md §The bitwise "
+                       "contract, window sums)")

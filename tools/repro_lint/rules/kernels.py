@@ -1,0 +1,82 @@
+"""RL4xx — Pallas kernel discipline.
+
+Kernel call sites must (a) guard grid arithmetic that floor-divides a
+runtime extent (pad, `%`-check, or ceil-div) and (b) pass an explicit
+``interpret=`` so CPU CI exercises the kernel in interpret mode
+(kernels/*/ops.py `_default_interpret`).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.context import terminal_name
+from tools.repro_lint.registry import rule
+
+
+def _pallas_calls(tree):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                terminal_name(node.func) == "pallas_call":
+            yield node
+
+
+def _is_ceil_div(fd: ast.BinOp) -> bool:
+    # -(-a // b): the FloorDiv's left operand is a unary minus.
+    return isinstance(fd.left, ast.UnaryOp) and isinstance(fd.left.op, ast.USub)
+
+
+# --------------------------------------------------------------------------
+# RL401
+
+
+@rule("RL401", "pallas_call grid uses a plain floor-divide with no "
+               "divisibility guard (pad / %-check / ceil-div)")
+def check_grid_divisibility(ctx):
+    for call in _pallas_calls(ctx.tree):
+        grid = None
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                grid = kw.value
+        if grid is None:
+            continue
+        scope = ctx.scopes.outermost_function(call) or ctx.tree
+        # one-hop name resolution: n_blocks = ... // ... used in grid=(n_blocks,)
+        local_defs = {}
+        for stmt in ast.walk(scope):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                local_defs[stmt.targets[0].id] = stmt.value
+        exprs = [grid]
+        for n in ast.walk(grid):
+            if isinstance(n, ast.Name) and n.id in local_defs:
+                exprs.append(local_defs[n.id])
+        floordivs = [n for e in exprs for n in ast.walk(e)
+                     if isinstance(n, ast.BinOp)
+                     and isinstance(n.op, ast.FloorDiv)]
+        unguarded = [fd for fd in floordivs if not _is_ceil_div(fd)]
+        if not unguarded:
+            continue
+        guarded = any(
+            (isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod))
+            or (isinstance(n, ast.Call) and terminal_name(n.func) == "pad")
+            for n in ast.walk(scope))
+        if not guarded:
+            yield (call.lineno,
+                   "grid floor-divides an extent with no divisibility guard "
+                   "in scope: a non-multiple shape silently drops the tail "
+                   "tile; pad the input, `%`-check the shape, or ceil-div "
+                   "`-(-n // block)` with masking")
+
+
+# --------------------------------------------------------------------------
+# RL402
+
+
+@rule("RL402", "pallas_call without an explicit interpret= fallback guard")
+def check_interpret_guard(ctx):
+    for call in _pallas_calls(ctx.tree):
+        if not any(kw.arg == "interpret" for kw in call.keywords):
+            yield (call.lineno,
+                   "pallas_call without explicit `interpret=`: CPU CI (and "
+                   "any TPU-less host) needs the interpret-mode fallback — "
+                   "thread it like kernels/*/ops.py `_default_interpret()`")

@@ -1,0 +1,120 @@
+"""RL2xx — sharding/collective discipline.
+
+Collectives must thread ``axis_name`` from the shard_map/ScanCarryPlan
+plumbing (a string literal silently pins one mesh layout); the engine is
+shard_map-only; and the scan runner donates its carry.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.context import terminal_name
+from tools.repro_lint.registry import rule
+
+# --------------------------------------------------------------------------
+# RL201
+
+# collective -> index of its axis_name positional argument
+_COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "ppermute": 1,
+    "pshuffle": 1, "all_gather": 1, "all_to_all": 1, "psum_scatter": 1,
+    "pbroadcast": 1, "axis_index": 0,
+}
+
+
+@rule("RL201", "collective called with a string-literal axis_name instead "
+               "of the threaded parameter")
+def check_literal_axis_name(ctx):
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = terminal_name(call.func)
+        if name not in _COLLECTIVES:
+            continue
+        axis = None
+        for kw in call.keywords:
+            if kw.arg == "axis_name":
+                axis = kw.value
+        if axis is None:
+            pos = _COLLECTIVES[name]
+            if len(call.args) > pos:
+                axis = call.args[pos]
+        if isinstance(axis, ast.Constant) and isinstance(axis.value, str):
+            yield (call.lineno,
+                   f"`{name}(..., axis_name={axis.value!r})` hardcodes the "
+                   "mesh axis; thread axis_name from the shard_map / "
+                   "ScanCarryPlan plumbing so lowerings stay layout-agnostic")
+
+
+# --------------------------------------------------------------------------
+# RL202
+
+_BANNED = frozenset({"pmap", "soft_pmap", "xmap"})
+
+
+@rule("RL202", "pmap/xmap usage (banned: this repo is shard_map-only)")
+def check_pmap_ban(ctx):
+    for node in ast.walk(ctx.tree):
+        name = None
+        if isinstance(node, ast.Attribute):
+            name = node.attr
+        elif isinstance(node, ast.Name):
+            name = node.id
+        if name in _BANNED:
+            yield (node.lineno,
+                   f"`{name}` is banned — the engine is shard_map-only "
+                   "(single jit program, donated scan carry); see "
+                   "docs/architecture.md")
+
+
+# --------------------------------------------------------------------------
+# RL203
+
+
+def _assigned_names(stmt: ast.AST) -> set:
+    out = set()
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+    return out
+
+
+@rule("RL203", "donated scan-carry buffer read after the runner call")
+def check_donated_carry_read(ctx):
+    # The compiled runners (core/rounds._scan_runner) donate argnums=(0,):
+    # after `state, m = runner(state, xs)` the *old* `state` buffers are
+    # dead. Rebinding the name on the call's own assignment (the idiom) is
+    # fine; loading it afterwards without a rebind is a use-after-free.
+    # Factories like `_scan_runner(loss_fn, spec, ...)` *return* the runner;
+    # calls to a name that is def'd in this module are factory calls, not
+    # donating invocations.
+    factory_defs = {f.name for f in ctx.scopes.functions
+                    if not isinstance(f, ast.Lambda)}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = terminal_name(node.func)
+        if not name or not (name == "runner" or name.endswith("_runner")):
+            continue
+        if name in factory_defs:
+            continue
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            continue
+        scope = ctx.scopes.enclosing_function(node) or ctx.tree
+        donated = node.args[0].id
+        names = [n for n in ast.walk(scope)
+                 if isinstance(n, ast.Name) and n.id == donated
+                 and (ctx.scopes.enclosing_function(n) or ctx.tree) is scope]
+        store_lines = sorted(n.lineno for n in names
+                             if isinstance(n.ctx, ast.Store)
+                             and n.lineno >= node.lineno)
+        for n in sorted(names, key=lambda n: n.lineno):
+            if (isinstance(n.ctx, ast.Load) and n.lineno > node.lineno
+                    and not any(node.lineno <= s <= n.lineno
+                                for s in store_lines)):
+                yield (n.lineno,
+                       f"`{donated}` was donated to `{name}(...)` on line "
+                       f"{node.lineno} (donate_argnums=(0,) carry) and is "
+                       "read afterwards — the buffer is dead; use the "
+                       "returned state")
+                break

@@ -1,0 +1,121 @@
+"""RL1xx — tracing discipline.
+
+The engine traces each stage factory's closure once and replays the jaxpr
+for all K rounds (docs/architecture.md §One compiled round). Host-side
+control flow, host entropy, and unhashable static args are all trace-time
+landmines that unit tests hitting a single trace never see.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.context import dotted_name, terminal_name
+from tools.repro_lint.registry import rule
+
+# --------------------------------------------------------------------------
+# RL101
+
+
+@rule("RL101", "assert inside a traced scope (invisible to the jaxpr; "
+               "vanishes under python -O)")
+def check_assert_in_traced(ctx):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assert) and ctx.scopes.in_traced_scope(node):
+            yield (node.lineno,
+                   "assert inside a traced scope: it runs once at trace "
+                   "time on tracers (and vanishes under `python -O`); "
+                   "validate static args in the factory body, or use a "
+                   "checked error on device values")
+
+
+# --------------------------------------------------------------------------
+# RL102
+
+_MUTABLE_ANNOT = frozenset({
+    "list", "List", "dict", "Dict", "set", "Set", "ndarray", "Array",
+    "bytearray", "defaultdict", "deque", "MutableMapping", "MutableSequence",
+})
+_MUTABLE_FACTORY = frozenset({"list", "dict", "set"})
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call) and terminal_name(dec.func) == "dataclass":
+            for kw in dec.keywords:
+                if (kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    return True
+    return False
+
+
+@rule("RL102", "mutable/unhashable field on a frozen dataclass used as a "
+               "static jit arg")
+def check_unhashable_static_field(ctx):
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef) or not _is_frozen_dataclass(cls):
+            continue
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            names = {terminal_name(n) for n in ast.walk(stmt.annotation)
+                     if isinstance(n, (ast.Name, ast.Attribute))}
+            bad = sorted(names & _MUTABLE_ANNOT)
+            factory = None
+            if isinstance(stmt.value, ast.Call) and \
+                    terminal_name(stmt.value.func) == "field":
+                for kw in stmt.value.keywords:
+                    if kw.arg == "default_factory" and \
+                            terminal_name(kw.value) in _MUTABLE_FACTORY:
+                        factory = terminal_name(kw.value)
+            if bad or factory:
+                what = bad[0] if bad else f"default_factory={factory}"
+                yield (stmt.lineno,
+                       f"field `{stmt.target.id}: {what}` makes frozen "
+                       f"dataclass `{cls.name}` unhashable — these are "
+                       "static-arg/lru_cache keys (RoundSpec, Topology); "
+                       "use a Tuple instead")
+
+
+# --------------------------------------------------------------------------
+# RL103
+
+_ENTROPY_PREFIXES = ("np.random.", "numpy.random.", "random.", "secrets.")
+_ENTROPY_EXACT = frozenset({
+    "time.time", "time.time_ns", "time.perf_counter", "time.monotonic",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "uuid.uuid4",
+})
+
+
+@rule("RL103", "host entropy/clock call (np.random, time, datetime) inside "
+               "a traced scope")
+def check_host_entropy_in_traced(ctx):
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        dn = dotted_name(call.func)
+        if dn is None:
+            continue
+        if dn in _ENTROPY_EXACT or dn.startswith(_ENTROPY_PREFIXES):
+            if ctx.scopes.in_traced_scope(call):
+                yield (call.lineno,
+                       f"`{dn}(...)` in a traced scope is baked in as a "
+                       "trace-time constant — replay and `topology_keys` "
+                       "folding break; thread a jax.random key instead")
+
+
+# --------------------------------------------------------------------------
+# RL104
+
+
+@rule("RL104", "validation assert in library code (vanishes under "
+               "python -O); raise instead")
+def check_library_assert(ctx):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assert) and \
+                not ctx.scopes.in_traced_scope(node):
+            yield (node.lineno,
+                   "validation assert in library code disappears under "
+                   "`python -O`; raise ValueError/TypeError so callers "
+                   "always get the check")

@@ -1,0 +1,78 @@
+"""AST symbol index over the repo, shared by repro-lint consumers and
+tools/check_doc_links.py (docs/paper_map.md cites symbols as
+``core/rounds.make_local_train`` / ``core/chain.Ledger.append``; the doc
+lane verifies those anchors exist so the map can't rot as modules move).
+
+Pure stdlib ``ast`` — nothing here imports jax or the repo's own modules.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Set
+
+
+def module_symbols(pyfile: str) -> Set[str]:
+    """Top-level names of one module: functions, classes, constants, and
+    ``Class.method`` / ``Class.attr`` one level deep."""
+    with open(pyfile, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=pyfile)
+    out = set()
+
+    def _targets(node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            yield node.name
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        yield e.id
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            yield node.target.id
+
+    for node in tree.body:
+        for name in _targets(node):
+            out.add(name)
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                for name in _targets(sub):
+                    out.add(f"{node.name}.{name}")
+    return out
+
+
+def build_index(root: str) -> Dict[str, Set[str]]:
+    """Map citation-style module keys to their symbol sets.
+
+    ``src/repro/core/rounds.py`` -> ``core/rounds`` (the ``src/repro``
+    prefix is implicit in doc citations); top-level trees keep their
+    directory: ``benchmarks/common.py`` -> ``benchmarks/common``,
+    ``tools/check_doc_links.py`` -> ``tools/check_doc_links``.
+    """
+    index: Dict[str, Set[str]] = {}
+    roots = [(os.path.join(root, "src", "repro"), ""),
+             (os.path.join(root, "benchmarks"), "benchmarks"),
+             (os.path.join(root, "examples"), "examples"),
+             (os.path.join(root, "tools"), "tools")]
+    for base, prefix in roots:
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__" and not d.startswith(".")]
+            for name in sorted(filenames):
+                if not name.endswith(".py"):
+                    continue
+                abspath = os.path.join(dirpath, name)
+                rel = os.path.relpath(abspath, base).replace(os.sep, "/")
+                key = rel[:-3]  # strip .py
+                if key.endswith("__init__"):
+                    key = key[:-len("__init__")].rstrip("/")
+                if prefix:
+                    key = f"{prefix}/{key}" if key else prefix
+                if not key:
+                    continue
+                index[key] = module_symbols(abspath)
+    return index
