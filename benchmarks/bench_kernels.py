@@ -1,7 +1,13 @@
 """Kernel micro-benchmarks: wall time of the jnp reference path (the
 interpret-mode Pallas timing is not hardware-representative — correctness is
 asserted in tests; the TPU-side perf claim is structural: VMEM tiling +
-online softmax remove the [S,S] HBM round-trip)."""
+online softmax remove the [S,S] HBM round-trip).
+
+``bench_pow`` times the Pallas 2-D PoW race next to the fori_loop reference
+it is bitwise-equal to, both as mhash/s, and notes which lowering
+``run_blade_fl``'s auto dispatch would pick for that budget — so the CSV
+shows the kernel's throughput AND whether the engine would actually use it.
+"""
 from __future__ import annotations
 
 import time
@@ -10,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import aggregation, mining
+from repro.core import aggregation, mining, rounds
 from repro.kernels.flash_attention import attention_ref
+from repro.kernels.pow_hash import pow_race
 
 
 def _time(fn, *args, reps=5):
@@ -33,6 +40,7 @@ def bench_attention():
     flops = 4 * b * h * s * s * d
     common.csv_line("kernel_attention_ref_s1024", us,
                     f"gflops_per_s={flops / us / 1e3:.1f}")
+    return {"attention_ref_us": us}
 
 
 def bench_fedavg():
@@ -43,17 +51,48 @@ def bench_fedavg():
     gb = c * n * 4 * 2 / 1e9
     common.csv_line("kernel_fedavg_20x1M", us,
                     f"gbytes_per_s={gb / (us / 1e6):.1f}")
+    return {"fedavg_us": us}
 
 
-def bench_pow():
-    f = jax.jit(lambda ph: mining.pow_search(ph, jnp.uint32(1),
-                                             jnp.uint32(0), 65536)[0])
-    us = _time(f, jnp.uint32(3))
-    common.csv_line("kernel_pow_64k", us,
-                    f"mhash_per_s={65536 / us:.2f}")
+def bench_pow(n_attempts: int = 65536, n_clients: int = 8,
+              chunk: int = 2048) -> dict:
+    """fori_loop reference vs the Pallas grid race, side by side in mhash/s.
+
+    The interpret-mode grid timing is a structural number (the kernel body
+    runs as jnp on CPU); the comparable quantity is hashes/s at the SAME
+    total budget C x n_attempts. The note records the lowering
+    ``run_blade_fl`` would dispatch for this budget (see
+    ``rounds.dispatch_plan``)."""
+    # per-client fori_loop engine path, vmapped over the same C clients
+    ids = jnp.arange(n_clients, dtype=jnp.uint32)
+    ref = jax.jit(lambda ph: jax.vmap(
+        lambda c: mining.pow_search(ph, jnp.uint32(1), c, n_attempts,
+                                    chunk=chunk)[0])(ids))
+    us_ref = _time(ref, jnp.uint32(3))
+    total = n_clients * n_attempts
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=1, eta=0.1,
+                            mine_attempts=n_attempts, use_kernel=True)
+    pow_choice = rounds.dispatch_plan(spec, lambda k: None, 1)["pow"]
+    common.csv_line(f"kernel_pow_ref_C{n_clients}x{n_attempts // 1024}k",
+                    us_ref, f"mhash_per_s={total / us_ref:.2f};"
+                            f"dispatch_pow={pow_choice}")
+    # the Pallas 2-D (clients x nonce chunks) race, interpret on CPU
+    grid = jax.jit(lambda ph: pow_race(ph, jnp.uint32(1), ids, n_attempts,
+                                       chunk=chunk, interpret=True)[0])
+    us_k = _time(grid, jnp.uint32(3), reps=2)
+    common.csv_line(f"kernel_pow_race_C{n_clients}x{n_attempts // 1024}k",
+                    us_k, f"mhash_per_s={total / us_k:.2f};interpret=True;"
+                          f"dispatch_pow={pow_choice}")
+    return {"ref_us": us_ref, "ref_mhash_per_s": total / us_ref,
+            "race_interpret_us": us_k,
+            "race_interpret_mhash_per_s": total / us_k,
+            "dispatch_pow": pow_choice, "n_clients": n_clients,
+            "n_attempts": n_attempts, "chunk": chunk}
 
 
-def run():
-    bench_attention()
-    bench_fedavg()
-    bench_pow()
+def run() -> dict:
+    out = {}
+    out.update(bench_attention())
+    out.update(bench_fedavg())
+    out["pow"] = bench_pow()
+    return out

@@ -13,7 +13,14 @@ and reports warm rounds/sec, once per mix lowering mode:
   * ``psum``   — ``RoundSpec.fast_allreduce=True``: one model-sized
     ``lax.psum`` mixes the clients and the digest/divergence diagnostics
     psum local partials (tolerance tier, hashes fork; see
-    docs/architecture.md §The tolerance tier).
+    docs/architecture.md §The tolerance tier);
+  * ``kernel`` — the Pallas tier (``use_kernel + fused_mix``,
+    ``kernel_interpret=True`` on host devices): the 2-D PoW grid race
+    (bitwise) plus the fused row-select mix matmul and one-sweep
+    digest/divergence (tolerance). Same all-gather as ``gather``, but the
+    mix writes only the C/D LOCAL rows and the diagnostics sweep the
+    broadcast set once instead of twice — the bytes column records that.
+    Interpret-mode wall-clock prices the grid's structure, not TPU time.
 
 Alongside rounds/sec each child reports ``est_mix_bytes_per_round`` — the
 analytic per-device receive volume of the communicate stage's collectives
@@ -57,7 +64,7 @@ _CHILD = textwrap.dedent("""
     n_dev = int(sys.argv[1]); n_rounds = int(sys.argv[2])
     n_clients = int(sys.argv[3]); samples = int(sys.argv[4])
     tau = int(sys.argv[5]); reps = int(sys.argv[6])
-    fast = bool(int(sys.argv[7]))
+    mode = sys.argv[7]
     if n_dev > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev}")
@@ -72,7 +79,12 @@ _CHILD = textwrap.dedent("""
     params = init_mlp(jax.random.fold_in(key, 1))
     spec = rounds.RoundSpec(n_clients=n_clients, tau=tau, eta=0.05,
                             n_lazy=2, sigma2=0.01, mine_attempts=256,
-                            difficulty_bits=2, fast_allreduce=fast)
+                            difficulty_bits=2,
+                            fast_allreduce=(mode == "psum"),
+                            use_kernel=(mode == "kernel"),
+                            fused_mix=(mode == "kernel"),
+                            kernel_interpret=True if mode == "kernel"
+                            else None)
     mesh = make_client_mesh(n_dev) if n_dev > 1 else None
     batch, rk = src.static_batch(), jax.random.fold_in(key, 2)
 
@@ -81,12 +93,20 @@ _CHILD = textwrap.dedent("""
     local = n_clients // n_dev
     if n_dev == 1:
         mix_bytes = 0.0
-    elif fast:
+    elif mode == "psum":
         # ring all-reduce of ONE model (reduce-scatter + all-gather)
         mix_bytes = 2.0 * (n_dev - 1) / n_dev * model_bytes
     else:
-        # all-gather of every other shard's client blocks
+        # all-gather of every other shard's client blocks (the kernel tier
+        # gathers identically; its win is rows written + diag sweeps)
         mix_bytes = (n_clients - local) * model_bytes
+    # model-bytes the mix + diagnostics WRITE/SWEEP per device per round:
+    # fused kernel writes only the local rows and sweeps the broadcast set
+    # once; the jnp path writes all C rows and sweeps twice.
+    if mode == "kernel":
+        hot_bytes = (n_clients + local) * model_bytes + n_clients * model_bytes
+    else:
+        hot_bytes = 2 * n_clients * model_bytes + 2 * n_clients * model_bytes
 
     def run():
         return rounds.run_blade_fl_scan(mlp_loss, spec, params, batch, rk,
@@ -97,10 +117,12 @@ _CHILD = textwrap.dedent("""
     for _ in range(reps):
         state, hist, ledger = run()
     wall = (time.time() - t0) / reps
-    print(json.dumps({"devices": n_dev, "mode": "psum" if fast else "gather",
+    print(json.dumps({"devices": n_dev, "mode": mode,
                       "rounds_per_s": n_rounds / wall, "wall_s": wall,
                       "model_bytes": model_bytes,
                       "est_mix_bytes_per_round": mix_bytes,
+                      "est_mix_diag_local_bytes": hot_bytes,
+                      "interpret": mode == "kernel",
                       "chain_valid": ledger.validate_chain(),
                       "final_global_loss": hist[-1]["global_loss"]}))
 """)
@@ -117,21 +139,23 @@ def bench(device_counts=(1, 2, 4, 8), n_rounds: int = 16, n_clients: int = 16,
             print(f"# skip devices={d}: {n_clients} clients not divisible")
             continue
         modes = {}
-        for mode, fast in (("gather", 0), ("psum", 1)):
+        for mode in ("gather", "psum", "kernel"):
             proc = subprocess.run(
                 [sys.executable, "-c", _CHILD, str(d), str(n_rounds),
                  str(n_clients), str(samples), str(tau), str(reps),
-                 str(fast)],
+                 mode],
                 capture_output=True, text=True, env=env, timeout=900)
             if proc.returncode != 0:
                 print(f"# devices={d} {mode} FAILED: {proc.stderr[-500:]}")
                 continue
             res = json.loads(proc.stdout.strip().splitlines()[-1])
             modes[mode] = res
+            note = f"rounds_per_s={res['rounds_per_s']:.1f}"
+            if res.get("interpret"):
+                note += ";interpret=True"
             common.csv_line(
                 f"multidevice_scan_{mode}_D{d}_K{n_rounds}_C{n_clients}",
-                res["wall_s"] / n_rounds * 1e6,
-                f"rounds_per_s={res['rounds_per_s']:.1f}")
+                res["wall_s"] / n_rounds * 1e6, note)
         if not modes:
             continue
         if "gather" in modes and "psum" in modes:
@@ -142,11 +166,18 @@ def bench(device_counts=(1, 2, 4, 8), n_rounds: int = 16, n_clients: int = 16,
                 modes["gather_vs_psum_bytes_ratio"] = (
                     g["est_mix_bytes_per_round"]
                     / p["est_mix_bytes_per_round"])
+        if "gather" in modes and "kernel" in modes:
+            g, k = modes["gather"], modes["kernel"]
+            modes["kernel_vs_gather_speedup"] = (
+                k["rounds_per_s"] / g["rounds_per_s"])
+            modes["gather_vs_kernel_local_bytes_ratio"] = (
+                g["est_mix_diag_local_bytes"]
+                / k["est_mix_diag_local_bytes"])
         out[d] = modes
     if 1 in out and "gather" in out[1]:
         base = out[1]["gather"]["rounds_per_s"]
         for d, modes in out.items():
-            for mode in ("gather", "psum"):
+            for mode in ("gather", "psum", "kernel"):
                 if mode in modes:
                     modes[mode]["vs_single_device_gather"] = (
                         modes[mode]["rounds_per_s"] / base)

@@ -19,27 +19,39 @@ loop — a dispatch-vs-loop-overhead crossover, not a bug; see
 and the rule of thumb (use the scan engine at paper scale and above, the
 per-round driver for micro-sims below the crossover).
 
+``bench_kernel_path`` times the same scan with the Pallas tier on —
+``use_kernel`` (bitwise PoW grid) and ``use_kernel + fused_mix`` (tolerance
+mix + one-sweep diagnostics) — against the kernel-off engine at a budget
+above the dispatch threshold, so the JSON records kernel-on vs kernel-off
+rounds/sec plus the analytic bytes the fused path saves
+(``roofline.round_hot_block_bytes``). Interpret-mode wall-clock on CPU is a
+COST number (the kernel body runs as jnp per grid step); the bitwise/
+tolerance contracts are what transfer to a real TPU lowering.
+
   PYTHONPATH=src python -m benchmarks.bench_rounds [--rounds 32] [--clients 20]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 
-from benchmarks import common
+from benchmarks import common, roofline
 from repro.core import rounds
 from repro.data.pipeline import FLDataSource
 from repro.models.mlp import init_mlp, mlp_loss
 
 
-def _setup(n_clients: int, samples: int, tau: int):
+def _setup(n_clients: int, samples: int, tau: int,
+           mine_attempts: int = 256):
     key = jax.random.key(0)
     src = FLDataSource(key, n_clients, samples, seed=0)
     params = init_mlp(jax.random.fold_in(key, 1))
     spec = rounds.RoundSpec(n_clients=n_clients, tau=tau, eta=0.05,
-                            n_lazy=2, sigma2=0.01, mine_attempts=256,
+                            n_lazy=2, sigma2=0.01,
+                            mine_attempts=mine_attempts,
                             difficulty_bits=2)
     return spec, params, src.static_batch(), jax.random.fold_in(key, 2)
 
@@ -74,8 +86,61 @@ def bench(n_rounds: int = 32, n_clients: int = 20, samples: int = 128,
     return out
 
 
+def bench_kernel_path(n_rounds: int = 8, n_clients: int = 20,
+                      samples: int = 128, tau: int = 4, reps: int = 3,
+                      mine_attempts: int = 1024) -> dict:
+    """Kernel-on vs kernel-off rounds/sec through ``run_blade_fl``'s auto
+    dispatch (so each row's note records the actual (pow, mix) lowering
+    taken) plus the analytic hot-block bytes each tier moves per round."""
+    spec_off, params, batch, key = _setup(n_clients, samples, tau,
+                                          mine_attempts)
+    model_bytes = 4 * sum(x.size for x in jax.tree.leaves(params))
+    tiers = {
+        "kernel_off": spec_off,
+        "pow_kernel": dataclasses.replace(spec_off, use_kernel=True,
+                                          kernel_interpret=True),
+        "pow_and_fused_mix": dataclasses.replace(spec_off, use_kernel=True,
+                                                 fused_mix=True,
+                                                 kernel_interpret=True),
+    }
+    out = {}
+    for name, spec in tiers.items():
+        def go():
+            return rounds.run_blade_fl(mlp_loss, spec, params, batch, key,
+                                       n_rounds)
+        go()  # warm: compile (scan runner is lru-cached across calls)
+        t0 = time.time()
+        for _ in range(reps):
+            state, hist, ledger = go()
+        wall = (time.time() - t0) / reps
+        disp = dict(rounds.LAST_DISPATCH)
+        est = roofline.round_hot_block_bytes(
+            model_bytes, n_clients, mine_attempts,
+            fused_mix=spec.fused_mix)
+        out[name] = {"rounds_per_s": n_rounds / wall, "wall_s": wall,
+                     "dispatch": disp,
+                     "est_hot_block_bytes_per_round": est["total_bytes"],
+                     "chain_valid": ledger.validate_chain()}
+        common.csv_line(
+            f"rounds_{name}_K{n_rounds}_C{n_clients}",
+            wall / n_rounds * 1e6,
+            f"rounds_per_s={n_rounds / wall:.1f};"
+            f"dispatch={disp['driver']}/{disp['pow']}/{disp['mix']};"
+            f"est_bytes_per_round={est['total_bytes']:.3g}")
+    off = out["kernel_off"]
+    for name in ("pow_kernel", "pow_and_fused_mix"):
+        out[name]["vs_kernel_off"] = (out[name]["rounds_per_s"]
+                                      / off["rounds_per_s"])
+    out["note"] = ("interpret=True on CPU: kernel rows price the grid's "
+                   "structure, not TPU wall-clock; bytes column is the "
+                   "transferable win")
+    return out
+
+
 def run():
-    bench()
+    out = {"scan_vs_loop": bench()}
+    out["kernel_path"] = bench_kernel_path()
+    return out
 
 
 if __name__ == "__main__":
@@ -87,3 +152,4 @@ if __name__ == "__main__":
     ap.add_argument("--reps", type=int, default=3)
     a = ap.parse_args()
     bench(a.rounds, a.clients, a.samples, a.tau, a.reps)
+    bench_kernel_path(min(a.rounds, 8), a.clients, a.samples, a.tau, a.reps)

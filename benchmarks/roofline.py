@@ -23,6 +23,50 @@ _SUGGESTIONS = {
 }
 
 
+def round_hot_block_bytes(model_bytes: float, n_clients: int,
+                          mine_attempts: int, *, n_devices: int = 1,
+                          fused_mix: bool = False,
+                          fast_allreduce: bool = False) -> Dict[str, float]:
+    """Analytic per-device bytes moved by ONE integrated round's hot block.
+
+    Counts the model-sized traffic of each stage (the PoW race is
+    compute-bound — it contributes hashes, not bytes):
+
+      * ``train_bytes`` — each local client reads + writes its own model
+        during the tau-step local update;
+      * ``collective_bytes`` — the communicate stage's receive volume
+        (all-gather of the C − C/D remote client blocks, or a ring
+        all-reduce of ONE model when ``fast_allreduce``);
+      * ``mix_bytes`` — the [C,C] x [C,P] mix matmul reads the C broadcast
+        models once and writes C rows — or only the C/D LOCAL rows when the
+        fused kernel's row-select does the slicing inside the contraction;
+      * ``diag_bytes`` — digest + divergence sweep the broadcast set twice
+        on the jnp path, ONCE with the fused single-sweep kernel.
+
+    Benches pair this with measured rounds/sec so the JSON records what a
+    kernel win is buying in bytes even where CPU wall-clock barely moves.
+    """
+    if n_devices < 1 or n_clients % n_devices:
+        raise ValueError(f"need n_devices >= 1 dividing C={n_clients}, "
+                         f"got {n_devices}")
+    local = n_clients // n_devices
+    train = 2.0 * local * model_bytes
+    if n_devices == 1:
+        coll = 0.0
+    elif fast_allreduce:
+        coll = 2.0 * (n_devices - 1) / n_devices * model_bytes
+    else:
+        coll = float(n_clients - local) * model_bytes
+    rows_written = local if fused_mix else n_clients
+    mix = float(n_clients + rows_written) * model_bytes
+    sweeps = 1.0 if fused_mix else 2.0
+    diag = sweeps * n_clients * model_bytes
+    return {"train_bytes": train, "collective_bytes": coll,
+            "mix_bytes": mix, "diag_bytes": diag,
+            "total_bytes": train + coll + mix + diag,
+            "pow_hashes": float(mine_attempts) * local}
+
+
 def load_records(pattern: str = "*.json") -> List[Dict]:
     recs = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):

@@ -63,9 +63,10 @@ def main() -> None:
                       flush=True)
                 results[f"{name}_{ds}"] = {"error": str(e)}
     if only is None or "kernels" in only:
-        bench_kernels.run()
+        results["kernels"] = bench_kernels.run()
     if only is None or "rounds" in only:
         results["rounds_scan_vs_loop"] = bench_rounds.bench()
+        results["rounds_kernel_path"] = bench_rounds.bench_kernel_path()
     if only is None or "topology" in only:
         results["topology_loss_vs_k"] = bench_topology.bench()
     if only is None or "schedules" in only:
@@ -77,6 +78,13 @@ def main() -> None:
         results["roofline_pod2x16x16"] = roofline.run("pod2x16x16")
 
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    if only is not None and os.path.exists(OUT):
+        # partial runs merge over the previous results instead of dropping
+        # every section they didn't re-run
+        with open(OUT) as f:
+            merged = json.load(f)
+        merged.update(results)
+        results = merged
     with open(OUT, "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"# total {time.time() - t0:.1f}s -> {OUT}")

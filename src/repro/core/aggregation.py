@@ -349,8 +349,18 @@ def mix_shift_halo(params, offsets: Sequence[int], weight: float,
     return jax.tree.map(one, params)
 
 
+def _kernel_mix_tree(params, w_rows, interpret):
+    """Route a tree's leaf matmuls through the fused Pallas row-block kernel
+    (``kernels.fedavg.mix_rows_flat``). Imported lazily so importing
+    ``core.aggregation`` never pulls the pallas machinery (the dry-run
+    imports this module before locking its device count)."""
+    from repro.kernels.fedavg import ops as fedavg_ops
+    return fedavg_ops.mix_rows_tree(params, w_rows, interpret=interpret)
+
+
 def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
-               *, axis_name: AxisName = None, n_shards: int = 1, full=None):
+               *, axis_name: AxisName = None, n_shards: int = 1, full=None,
+               use_kernel: bool = False, interpret: Optional[bool] = None):
     """General/sparse-``W`` fallback: masked gather pattern.
 
     All-gather the broadcast set (a permute pattern on the ring; pass a
@@ -360,7 +370,26 @@ def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
     same ``[C, ...]`` input), and keep only this shard's client rows. A
     SUMMA-style permute-and-accumulate over shard blocks would halve peak
     memory but reorders the fp32 contraction, so it is not used.
+
+    ``use_kernel=True`` (RoundSpec.fused_mix) contracts through the fused
+    Pallas row-block kernel instead: the shard's ROW block of the reweighted
+    ``W`` is sliced first and only the local output rows are ever computed —
+    the weighted gather, matmul and local-row-select fuse into one kernel.
+    Tolerance tier (the kernel's contraction order replaces XLA's), like the
+    psum fast tier. ``interpret`` threads RoundSpec.kernel_interpret
+    (None = interpret everywhere except real TPU backends).
     """
+    if use_kernel:
+        w_rows = _reweight_rows(W, weights)
+        if axis_name is not None:
+            full = client_all_gather(params, axis_name) if full is None \
+                else full
+            idx = client_shard_index(axis_name)
+            local = w_rows.shape[0] // n_shards
+            w_rows = jax.lax.dynamic_slice_in_dim(w_rows, idx * local, local,
+                                                  axis=0)
+            return _kernel_mix_tree(full, w_rows, interpret)
+        return _kernel_mix_tree(params, w_rows, interpret)
     if axis_name is None:
         return mix(params, W, weights)
     full = client_all_gather(params, axis_name) if full is None else full
@@ -433,7 +462,9 @@ def mix_psum(params, weights: Optional[jnp.ndarray] = None, *,
 
 def mix_psum_dense(params, W: jnp.ndarray,
                    weights: Optional[jnp.ndarray] = None, *,
-                   axis_name: AxisName = None, n_shards: int = 1):
+                   axis_name: AxisName = None, n_shards: int = 1,
+                   use_kernel: bool = False,
+                   interpret: Optional[bool] = None):
     """General-``W`` psum variant: local column-block matmul, then psum.
 
     Shard d holds client rows ``[d·L, (d+1)·L)``; it contracts them against
@@ -447,18 +478,30 @@ def mix_psum_dense(params, W: jnp.ndarray,
     :func:`mix`.
 
     NOT bitwise: the contraction is reassociated across shards (tolerance
-    tier). With ``axis_name=None`` this IS :func:`mix`.
+    tier). With ``axis_name=None`` this IS :func:`mix` (or the fused kernel
+    mix when ``use_kernel=True``, which routes the local column-block matmul
+    through ``kernels.fedavg.mix_rows_flat``).
     """
     if axis_name is None:
-        return mix(params, W, weights)
+        return mix_gather(params, W, weights, use_kernel=use_kernel,
+                          interpret=interpret) if use_kernel \
+            else mix(params, W, weights)
     W = _reweight_rows(W, weights)
     idx = client_shard_index(axis_name)
     local = W.shape[0] // n_shards
     w_cols = jax.lax.dynamic_slice_in_dim(W, idx * local, local, axis=1)
+    if use_kernel:
+        from repro.kernels.fedavg import ops as fedavg_ops
+        if interpret is None:
+            interpret = fedavg_ops._default_interpret()
 
     def one(leaf):
         flat = leaf.astype(jnp.float32).reshape((leaf.shape[0], -1))
-        part = w_cols @ flat                       # [C, F] partial products
+        if use_kernel:
+            from repro.kernels.fedavg.kernel import mix_rows_flat
+            part = mix_rows_flat(w_cols, flat, interpret=interpret)
+        else:
+            part = w_cols @ flat                   # [C, F] partial products
         full = jax.lax.psum(part, axis_name)
         mine = jax.lax.dynamic_slice_in_dim(full, idx * local, local, axis=0)
         return mine.reshape(leaf.shape).astype(leaf.dtype)

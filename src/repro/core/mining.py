@@ -48,6 +48,30 @@ def mix_hash(prev_hash: jnp.ndarray, payload: jnp.ndarray,
     return h
 
 
+def client_salt(client_id) -> jnp.ndarray:
+    """Per-client payload salt defining the disjoint nonce spaces of the
+    blockchain race (paper §3.1 Step 3). ONE definition shared by
+    :func:`pow_search` and the Pallas grid path (``kernels/pow_hash``) — the
+    bitwise ledger contract depends on both paths salting identically.
+    Broadcasts over a vector of client ids."""
+    return _avalanche(jnp.asarray(client_id, jnp.uint32) * _M2)
+
+
+# Initial accumulator of the per-leaf digest fold (golden-ratio constant).
+DIGEST_INIT = np.uint32(0x9E3779B9)
+
+
+def fold_digest(acc: jnp.ndarray, leaf_sum: jnp.ndarray) -> jnp.ndarray:
+    """Fold one leaf's fp32 sum into the running uint32 digest accumulator —
+    the per-leaf step of :func:`digest_tree`, shared with the fused
+    digest+divergence sweep (``kernels/fedavg``) so the fold itself cannot
+    drift between the jnp and kernel paths (their digests still differ
+    whenever the leaf SUMS are associated differently)."""
+    bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(leaf_sum, jnp.float32), jnp.uint32)
+    return _avalanche(acc ^ bits)
+
+
 def digest_tree(tree, axis_name=None) -> jnp.ndarray:
     """Cheap uint32 digest of a pytree of arrays (model fingerprint for the
     block header). Deterministic, differentiation-free.
@@ -59,7 +83,7 @@ def digest_tree(tree, axis_name=None) -> jnp.ndarray:
     bitwise engine's value. The default ``axis_name=None`` full-width sum is
     the bitwise-contract path."""
     leaves = jax.tree.leaves(tree)
-    acc = jnp.uint32(0x9E3779B9)
+    acc = jnp.uint32(DIGEST_INIT)
     for leaf in leaves:
         x = leaf
         s = jnp.asarray(
@@ -67,8 +91,7 @@ def digest_tree(tree, axis_name=None) -> jnp.ndarray:
             else jnp.sum(x.astype(jnp.int32)).astype(jnp.float32))
         if axis_name is not None:
             s = jax.lax.psum(s, axis_name)
-        bits = jax.lax.bitcast_convert_type(s, jnp.uint32)
-        acc = _avalanche(acc ^ bits)
+        acc = fold_digest(acc, s)
     return acc
 
 
@@ -86,7 +109,7 @@ def pow_search(prev_hash: jnp.ndarray, payload: jnp.ndarray, client_id: jnp.ndar
     n_attempts = int(n_attempts)
     chunk = min(chunk, n_attempts)
     n_chunks = -(-n_attempts // chunk)
-    salt = _avalanche(client_id.astype(jnp.uint32) * _M2)
+    salt = client_salt(client_id)
     base = jnp.asarray(nonce_offset, jnp.uint32)
 
     def body(i, best):

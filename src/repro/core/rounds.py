@@ -161,6 +161,30 @@ class RoundSpec:
     # sharded ledger hashes fork from the single-device chain (both chains
     # still self-validate). Default False keeps every path bit-for-bit.
     fast_allreduce: bool = False
+    # Pallas kernel tier (docs/architecture.md §Kernel dispatch):
+    #   use_kernel — Steps 3+4 PoW race runs on the kernels/pow_hash 2-D
+    #     (clients × nonce-chunk) grid instead of the per-client
+    #     vmap(fori_loop). Bitwise-identical (best_hash, best_nonce, winner,
+    #     ledger hashes) at every (mine_attempts, mine_chunk) — same budget
+    #     masking, same client_salt nonce spaces — so the ledger does NOT
+    #     fork. run_blade_fl's auto dispatch downgrades it below
+    #     _KERNEL_MIN_ATTEMPTS where grid overhead beats the fori_loop.
+    #   fused_mix — dense mixes contract through the fused kernels/fedavg
+    #     row-block matmul (mix_gather / mix_psum_dense use_kernel=True) and
+    #     the digest + divergence diagnostics share ONE fused sweep of the
+    #     broadcast set. Tolerance tier like fast_allreduce: tile-partial
+    #     fp32 sums reassociate the digest, so ledger hashes fork
+    #     deterministically (both chains still self-validate).
+    #   kernel_interpret — None runs Pallas natively on TPU backends and in
+    #     interpret mode everywhere else; tests pin True for the CPU
+    #     equivalence sweeps.
+    #   mine_chunk — nonce chunk (fori_loop) / grid tile (kernel) size,
+    #     shared so both paths charge identical budget masks; results are
+    #     chunk-invariant (running min + first-tie argmin == full argmin).
+    use_kernel: bool = False
+    fused_mix: bool = False
+    kernel_interpret: Optional[bool] = None
+    mine_chunk: int = 1024
 
 
 class RoundState(NamedTuple):
@@ -351,7 +375,18 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     with psums of local partials instead of the broadcast-set gather — the
     fast round never materializes the full client axis (except for lazy
     detection, which keeps its exact gathered math). Permute lowerings are
-    already O(window) and stay bitwise under the flag."""
+    already O(window) and stay bitwise under the flag.
+
+    ``spec.fused_mix`` routes the dense mixes through the fused Pallas
+    row-block matmul (``aggregation.mix_gather`` / ``mix_psum_dense`` with
+    ``use_kernel=True``) and computes digest + divergence in ONE fused sweep
+    of the broadcast set (``kernels/fedavg.digest_divergence_tree``) instead
+    of two jnp traversals. Tolerance tier, same contract as
+    ``fast_allreduce``: the fp32 reassociation forks the ledger hashes
+    deterministically. FullMesh's all-reduce mix and the permute lowerings
+    are untouched (one mean / O(window) moves — nothing for a matmul kernel
+    to win), as are the psum'd diagnostics of the fast_dense path (the fused
+    sweep needs the client axis resident, psum partials don't)."""
     topo = spec.topology
     low = topo.lowering(spec.n_clients, fast_allreduce=spec.fast_allreduce)
     n_local = spec.n_clients // n_shards
@@ -434,22 +469,32 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
             else:
                 w = topo.matrix(spec.n_clients, key=k_topo,
                                 round_idx=round_idx)
-                params = aggregation.mix_psum_dense(params, w, weights,
-                                                    axis_name=axis_name,
-                                                    n_shards=n_shards)
+                params = aggregation.mix_psum_dense(
+                    params, w, weights, axis_name=axis_name,
+                    n_shards=n_shards, use_kernel=spec.fused_mix,
+                    interpret=spec.kernel_interpret)
             return params, digest, divergence, extra
         if full is None:
             full = aggregation.client_all_gather(params, axis_name)
         else:
             full = jax.lax.optimization_barrier(full)
-        digest = mining.digest_tree(full)
         extra = {}
+        if spec.fused_mix:
+            # one fused sweep of the broadcast set computes digest AND
+            # divergence (kernels/fedavg.digest_divergence_tree) — the jnp
+            # path below traverses it twice. Tolerance tier: the tile-partial
+            # leaf sums fork the digest (and the ledger) deterministically.
+            from repro.kernels.fedavg import ops as fedavg_ops
+            digest, divergence = fedavg_ops.digest_divergence_tree(
+                full, interpret=spec.kernel_interpret)
+        else:
+            digest = mining.digest_tree(full)
+            divergence = aggregation.client_divergence(full)
         if spec.detect_lazy:
             prev_full = aggregation.client_all_gather(prev_params, axis_name)
             suspects, _ = detection.detect_lazy_round(
                 full, prev_full, threshold_frac=spec.detect_threshold)
             extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-        divergence = aggregation.client_divergence(full)
         if kind == topology_lib.ALL_REDUCE:
             params = aggregation.mix_all_reduce(params, weights,
                                                 axis_name=axis_name,
@@ -471,7 +516,9 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
             w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
             params = aggregation.mix_gather(params, w, weights,
                                             axis_name=axis_name,
-                                            n_shards=n_shards, full=full)
+                                            n_shards=n_shards, full=full,
+                                            use_kernel=spec.fused_mix,
+                                            interpret=spec.kernel_interpret)
         return params, digest, divergence, extra
 
     return communicate
@@ -489,19 +536,36 @@ def make_mine(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     Sharded, each shard races only its local client block (ids offset by
     the shard index so the global salt assignment is unchanged), then the
     per-client best hashes/nonces — uint32, so gather order cannot perturb
-    them — are all-gathered for the replicated argmin."""
+    them — are all-gathered for the replicated argmin.
+
+    ``spec.use_kernel`` dispatches the race to the Pallas 2-D
+    (clients × nonce chunks) grid (``kernels/pow_hash``) instead of the
+    per-client ``vmap(fori_loop)``: same ``client_salt`` nonce spaces, same
+    tail-chunk budget mask charging exactly ``mine_attempts`` nonces, so
+    every output — and therefore the hash-linked ledger — is bitwise
+    identical to the fori_loop path at any ``(mine_attempts, mine_chunk)``
+    (tests/test_kernels.py pins this including non-divisible budgets)."""
     n_local = spec.n_clients // n_shards
+    if spec.use_kernel:
+        from repro.kernels.pow_hash import ops as pow_ops
 
     def mine(prev_hash, digest, round_idx):
         client_ids = jnp.arange(n_local, dtype=jnp.uint32)
         if axis_name is not None:
             shard = aggregation.client_shard_index(axis_name).astype(jnp.uint32)
             client_ids = client_ids + shard * jnp.uint32(n_local)
-        search = jax.vmap(
-            lambda cid: mining.pow_search(
-                prev_hash, digest, cid, spec.mine_attempts,
-                nonce_offset=round_idx.astype(jnp.uint32) * jnp.uint32(1 << 20)))
-        best_h, best_n = search(client_ids)
+        nonce_offset = round_idx.astype(jnp.uint32) * jnp.uint32(1 << 20)
+        if spec.use_kernel:
+            best_h, best_n = pow_ops.pow_race(
+                prev_hash, digest, client_ids, spec.mine_attempts,
+                nonce_offset=nonce_offset, chunk=spec.mine_chunk,
+                interpret=spec.kernel_interpret)
+        else:
+            search = jax.vmap(
+                lambda cid: mining.pow_search(
+                    prev_hash, digest, cid, spec.mine_attempts,
+                    nonce_offset=nonce_offset, chunk=spec.mine_chunk))
+            best_h, best_n = search(client_ids)
         best_h = aggregation.client_all_gather(best_h, axis_name)
         best_n = aggregation.client_all_gather(best_n, axis_name)
         winner = mining.winner_of(best_h)
@@ -626,6 +690,74 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
 # scan engine is ONE trace for the full horizon, not one per round.
 TRACE_COUNTS: Dict[str, int] = {"scan_runner": 0}
 
+# Problem-size crossovers for run_blade_fl's automatic dispatch, measured on
+# XLA:CPU (benchmarks/bench_rounds.py; docs/architecture.md §Kernel
+# dispatch). Micro-sims at or below BOTH micro bounds run faster on the
+# per-round driver than nested in the scan's while loop, and a PoW grid
+# under _KERNEL_MIN_ATTEMPTS costs more in kernel launch/grid overhead than
+# the fori_loop it replaces.
+_MICRO_MAX_CLIENTS = 4
+_MICRO_MAX_SAMPLES = 32
+_KERNEL_MIN_ATTEMPTS = 512
+
+# The last decision run_blade_fl's auto dispatch took (driver/pow/mix +
+# reason) — module-level like TRACE_COUNTS so benchmarks can record the
+# chosen lowering in their CSV notes without re-deriving it.
+LAST_DISPATCH: Dict[str, str] = {}
+
+
+def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
+                  jit: bool = True, stacked: bool = False,
+                  mesh: Optional[Mesh] = None) -> Dict[str, str]:
+    """Pick the (driver, pow, mix) lowerings for this problem size.
+
+    Pure function of the call signature — ``run_blade_fl`` applies it and
+    records the result in :data:`LAST_DISPATCH`; benches call it directly to
+    annotate their CSV lines. Keys:
+
+      ``driver`` — ``"scan"`` (all K rounds in one jitted ``lax.scan``) or
+        ``"loop"`` (per-round jitted driver). Callables and ``jit=False``
+        force the loop; static micro-sims at or below the measured CPU
+        crossover (C <= 4 AND <= 32 samples per client, single device,
+        non-stacked) dispatch to the loop too — the results are bitwise
+        identical either way, only wall-clock differs.
+      ``pow`` — ``"kernel"`` (Pallas 2-D grid) when ``spec.use_kernel`` and
+        the budget amortizes the grid (``mine_attempts >=
+        _KERNEL_MIN_ATTEMPTS``), else ``"fori_loop"``. Bitwise identical
+        either way.
+      ``mix`` — ``"fused"`` (Pallas row-block matmul + one-sweep
+        diagnostics, tolerance tier) when ``spec.fused_mix``, else
+        ``"jnp"``.
+      ``reason`` — one phrase saying why the driver was chosen.
+    """
+    plan: Dict[str, str] = {}
+    if callable(batches):
+        plan.update(driver="loop", reason="per-round batch callable")
+    elif not jit:
+        plan.update(driver="loop", reason="jit=False debugging path")
+    else:
+        samples = 0
+        if not stacked:
+            leaves = jax.tree.leaves(batches)
+            samples = max((x.shape[1] for x in leaves if x.ndim > 1),
+                          default=0)
+        micro = (mesh is None and not stacked
+                 and spec.n_clients <= _MICRO_MAX_CLIENTS
+                 and samples <= _MICRO_MAX_SAMPLES)
+        if micro:
+            plan.update(driver="loop",
+                        reason=f"micro-sim C={spec.n_clients} samples="
+                               f"{samples} below scan crossover")
+        else:
+            plan.update(driver="scan", reason="static batch at/above "
+                                              "scan crossover")
+    if spec.use_kernel and spec.mine_attempts < _KERNEL_MIN_ATTEMPTS:
+        plan["pow"] = "fori_loop"
+    else:
+        plan["pow"] = "kernel" if spec.use_kernel else "fori_loop"
+    plan["mix"] = "fused" if spec.fused_mix else "jnp"
+    return plan
+
 # Jitted runners cached on (loss_fn identity, static config). A weakref
 # scheme cannot work here — the cached runner's closure chain pins loss_fn,
 # so a weak key would never die. A small bounded LRU is the honest tradeoff:
@@ -748,11 +880,21 @@ def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
 
     Dispatches to the compiled scan engine when ``batches`` is a static
     pytree (see module docstring); falls back to the per-round Python loop
-    for callables (``batches(k) -> batch``) or ``jit=False``. ``mesh`` (+
-    optional ``plan``) selects the client-sharded scan engine and therefore
-    requires the static-batch path.
+    for callables (``batches(k) -> batch``), ``jit=False``, and static
+    micro-sims below the scan crossover (:func:`dispatch_plan` — results are
+    bitwise identical on either driver, this only picks the faster one).
+    The same plan downgrades ``spec.use_kernel`` when the mining budget is
+    too small to amortize the Pallas grid; the decision taken is recorded in
+    :data:`LAST_DISPATCH`. ``mesh`` (+ optional ``plan``) selects the
+    client-sharded scan engine and therefore requires the static-batch path.
     """
-    if jit and not callable(batches):
+    decision = dispatch_plan(spec, batches, n_rounds, jit=jit,
+                             stacked=stacked, mesh=mesh)
+    LAST_DISPATCH.clear()
+    LAST_DISPATCH.update(decision)
+    if spec.use_kernel and decision["pow"] == "fori_loop":
+        spec = dataclasses.replace(spec, use_kernel=False)
+    if decision["driver"] == "scan":
         return run_blade_fl_scan(loss_fn, spec, params_single, batches, key,
                                  n_rounds, ledger=ledger, stacked=stacked,
                                  mesh=mesh, plan=plan)

@@ -1,3 +1,5 @@
-from repro.kernels.fedavg.kernel import fedavg_flat  # noqa: F401
-from repro.kernels.fedavg.ops import fedavg_tree  # noqa: F401
+from repro.kernels.fedavg.kernel import (digest_div_flat,  # noqa: F401
+                                         fedavg_flat, mix_rows_flat)
+from repro.kernels.fedavg.ops import (digest_divergence_tree,  # noqa: F401
+                                      fedavg_tree, mix_rows_tree)
 from repro.kernels.fedavg.ref import fedavg_flat_ref  # noqa: F401

@@ -15,6 +15,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -60,3 +61,93 @@ def fedavg_flat(x: jnp.ndarray, weights: jnp.ndarray,
         interpret=interpret,
     )(x, weights, noise)
     return out[:, :n]
+
+
+def _mix_rows_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)            # [R, K]
+    x = x_ref[...].astype(jnp.float32)            # [K, bn]
+    o_ref[...] = jnp.dot(w, x,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def mix_rows_flat(w_rows: jnp.ndarray, x: jnp.ndarray, *, block_n: int = 2048,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Fused weighted-gather + matmul + row-select: ``w_rows [R, K] @ x
+    [K, N] -> [R, N]``, tiled over N with the whole (reweighted,
+    row-selected) mixing block resident per tile.
+
+    This is the local column/row-block contraction of the Steps 2+5 mix:
+    ``aggregation.mix_gather`` passes its shard's ROW block of ``W`` (R =
+    local clients, K = C — only the local rows are ever computed, the
+    row-select is fused into the matmul instead of slicing a full [C, N]
+    product), ``aggregation.mix_psum_dense`` passes its COLUMN block (R = C,
+    K = local clients). Tolerance tier: the kernel's own contraction order
+    replaces XLA's.
+    """
+    r, k = w_rows.shape
+    k2, n = x.shape
+    if k != k2:
+        raise ValueError(
+            f"mix_rows_flat: w_rows [R={r}, K={k}] does not contract with "
+            f"x [K={k2}, N={n}]")
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    npad = x.shape[1]
+    out = pl.pallas_call(
+        _mix_rows_kernel,
+        grid=(npad // block_n,),
+        in_specs=[pl.BlockSpec((r, k), lambda i: (0, 0)),
+                  pl.BlockSpec((k, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((r, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, npad), x.dtype),
+        interpret=interpret,
+    )(w_rows, x)
+    return out[:, :n]
+
+
+def _digest_div_kernel(x_ref, s_ref, r_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # [C, bn]
+    c = x.shape[0]
+    # column means over the (fully resident) client axis; zero-padded tail
+    # columns contribute 0 to both outputs, so no mask is needed
+    mean = jnp.sum(x, axis=0, keepdims=True) / np.float32(c)
+    s_ref[0] = s_ref[0] + jnp.sum(x)
+    r_ref[...] = r_ref[...] + jnp.sum((x - mean) ** 2, axis=1)
+
+
+def digest_div_flat(x: jnp.ndarray, *, block_n: int = 2048,
+                    interpret: bool = True):
+    """One sweep of a ``[C, N]`` leaf for BOTH diagnostics of the
+    communicate stage: returns ``(leaf_sum scalar, residuals [C])`` where
+    ``leaf_sum`` feeds the model digest fold (``mining.fold_digest``) and
+    ``residuals[c]`` is client c's squared distance from the client mean
+    over this leaf (the divergence diagnostic, Def. 1). The jnp path reads
+    the broadcast set twice (digest_tree + client_divergence); this reads it
+    once. Tolerance tier: the leaf sum accumulates tile partials, so the
+    digest forks deterministically from ``mining.digest_tree``.
+    """
+    c, n = x.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    s, r = pl.pallas_call(
+        _digest_div_kernel,
+        grid=(x.shape[1] // block_n,),
+        in_specs=[pl.BlockSpec((c, block_n), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1,), lambda i: (0,)),
+                   pl.BlockSpec((c,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((c,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return s[0], r

@@ -7,7 +7,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.kernel import fedavg_flat
+from repro.core import mining
+from repro.kernels.fedavg.kernel import (digest_div_flat, fedavg_flat,
+                                         mix_rows_flat)
 from repro.kernels.fedavg.ref import fedavg_flat_ref
 
 
@@ -38,3 +40,55 @@ def fedavg_tree(params, weights=None, noise_tree=None, *, use_kernel: bool = Tru
             agg = fedavg_flat_ref(flat, weights, nzf)
         out.append(agg.reshape(leaf.shape))
     return jax.tree.unflatten(treedef, out)
+
+
+def mix_rows_tree(params, w_rows, *, block_n: int = 2048,
+                  interpret: bool | None = None):
+    """Apply the fused row-block mix matmul leaf-wise: every ``[C, ...]``
+    leaf flattens to ``[C, N]``, contracts against ``w_rows [R, C]`` (already
+    reweighted + row-selected) and comes back as ``[R, ...]``. Traceable —
+    called from inside the round scan by ``aggregation.mix_gather``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    r = w_rows.shape[0]
+
+    def one(leaf):
+        flat = leaf.astype(jnp.float32).reshape((leaf.shape[0], -1))
+        out = mix_rows_flat(w_rows, flat, block_n=block_n,
+                            interpret=interpret)
+        return out.reshape((r,) + leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def digest_divergence_tree(tree, *, block_n: int = 2048,
+                           interpret: bool | None = None):
+    """Fused diagnostics: ONE sweep of the broadcast set computes both the
+    model digest and the client-divergence diagnostic that the jnp path
+    (``mining.digest_tree`` + ``aggregation.client_divergence``) computes in
+    two traversals. Returns ``(digest uint32, divergence f32 scalar)``.
+
+    Tolerance tier: per-leaf sums accumulate fp32 tile partials, so the
+    digest — and every downstream ledger hash — forks deterministically from
+    the bitwise engine's chain (both chains still self-validate, same
+    contract as ``fast_allreduce``). Divergence matches
+    ``aggregation.client_divergence`` to fp32 tolerance. Non-float leaves
+    (absent from real param trees) keep digest_tree's exact int32 sum."""
+    if interpret is None:
+        interpret = _default_interpret()
+    leaves = jax.tree.leaves(tree)
+    c = leaves[0].shape[0]
+    acc = jnp.uint32(mining.DIGEST_INIT)
+    total = jnp.zeros((c,), jnp.float32)
+    for leaf in leaves:
+        flat = leaf.astype(jnp.float32).reshape((c, -1))
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            s, res = digest_div_flat(flat, block_n=block_n,
+                                     interpret=interpret)
+        else:
+            s = jnp.sum(leaf.astype(jnp.int32)).astype(jnp.float32)
+            mean = jnp.mean(flat, axis=0, keepdims=True)
+            res = jnp.sum((flat - mean) ** 2, axis=1)
+        acc = mining.fold_digest(acc, s)
+        total = total + res
+    return acc, jnp.sqrt(jnp.mean(total))

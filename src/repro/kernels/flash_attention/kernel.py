@@ -86,11 +86,16 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     interpret: bool = True) -> jnp.ndarray:
     """q, k, v: [B, H, S, D] (kv already expanded to H heads) -> [B, H, S, D]."""
     b, h, s, d = q.shape
-    assert k.shape == v.shape == (b, h, s, d), (q.shape, k.shape, v.shape)
+    if not (k.shape == v.shape == (b, h, s, d)):
+        raise ValueError(
+            f"q/k/v shapes must match: q={q.shape} k={k.shape} v={v.shape}")
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     block_q = min(block_q, s)
     block_k = min(block_k, s)
-    assert s % block_q == 0 and s % block_k == 0, "pad seq to block multiple"
+    if s % block_q or s % block_k:
+        raise ValueError(
+            f"pad seq to a block multiple: S={s} not divisible by "
+            f"block_q={block_q} / block_k={block_k}")
     nq = s // block_q
     nk = s // block_k
     qf = q.reshape(b * h, s, d)

@@ -1,3 +1,4 @@
-from repro.kernels.pow_hash.kernel import pow_search_kernel  # noqa: F401
-from repro.kernels.pow_hash.ops import mine  # noqa: F401
+from repro.kernels.pow_hash.kernel import (pow_race_kernel,  # noqa: F401
+                                           pow_search_kernel)
+from repro.kernels.pow_hash.ops import mine, pow_race  # noqa: F401
 from repro.kernels.pow_hash.ref import pow_search_ref  # noqa: F401

@@ -66,6 +66,8 @@ def pow_search_kernel(prev_hash, payload, nonce_offset, n_attempts: int, *,
                       block: int = 2048, interpret: bool = True):
     """Returns (best_hash, best_nonce) over n_attempts nonces. All inputs
     uint32 scalars (payload already salted per client)."""
+    if n_attempts <= 0:
+        raise ValueError(f"n_attempts must be positive, got {n_attempts}")
     block = min(block, n_attempts)
     n_blocks = -(-n_attempts // block)
     seed = jnp.stack([jnp.asarray(prev_hash, jnp.uint32),
@@ -82,3 +84,79 @@ def pow_search_kernel(prev_hash, payload, nonce_offset, n_attempts: int, *,
         interpret=interpret,
     )(seed)
     return best_h[0], best_n[0]
+
+
+def _pow_race_kernel(seed_ref, payload_ref, best_h_ref, best_n_ref, *,
+                     block: int, n_attempts: int):
+    """2-D grid body: program (c, j) races nonce chunk j of client c.
+
+    The chunk axis is the minor (innermost) grid dimension, so client c's
+    output block is revisited across all its chunks and carries the running
+    (min hash, argmin nonce) — the same reduction the 1-D kernel performs,
+    now one row per client. Chunked running-min with first-index tie-breaking
+    per chunk equals the full-range first-occurrence argmin, so the result is
+    bitwise independent of ``block`` — the property the engine's
+    (mine_attempts, mine_chunk) sweep tests pin.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_h_ref[...] = jnp.full_like(best_h_ref, np.uint32(0xFFFFFFFF))
+        best_n_ref[...] = jnp.zeros_like(best_n_ref)
+
+    prev_hash = seed_ref[0]
+    offset = seed_ref[1]
+    payload = payload_ref[0]
+    local = (jnp.uint32(j).astype(jnp.uint32) * np.uint32(block)
+             + jax.lax.broadcasted_iota(jnp.uint32, (1, block), 1))[0]
+    nonces = offset + local
+    h = prev_hash * _M1
+    h = _avalanche(h ^ payload)
+    hs = _avalanche(h ^ nonces)
+    # budget mask: the tail chunk charges exactly n_attempts nonces (eq. 1)
+    hs = jnp.where(local < np.uint32(n_attempts), hs,
+                   jnp.full_like(hs, np.uint32(0xFFFFFFFF)))
+    idx = jnp.argmin(hs)
+    h_min = hs[idx]
+    n_min = nonces[idx]
+    take = h_min < best_h_ref[0]
+    best_h_ref[0] = jnp.where(take, h_min, best_h_ref[0])
+    best_n_ref[0] = jnp.where(take, n_min, best_n_ref[0])
+
+
+def pow_race_kernel(prev_hash, payloads, nonce_offset, n_attempts: int, *,
+                    block: int = 2048, interpret: bool = True):
+    """Whole-race form of the PoW search: one 2-D (clients × nonce chunks)
+    grid replaces the per-client ``vmap(fori_loop)`` of
+    ``core.mining.pow_search``.
+
+    ``payloads`` is the ``[C]`` uint32 vector of per-client pre-salted
+    payloads (``digest ^ mining.client_salt(client_id)`` — the disjoint
+    nonce spaces); ``prev_hash`` / ``nonce_offset`` are shared uint32
+    scalars. Returns ``(best_hashes [C], best_nonces [C])``, bitwise equal
+    to vmapping ``pow_search_kernel`` (and to the fori_loop path) at every
+    ``(n_attempts, block)`` including non-divisible budgets.
+    """
+    if n_attempts <= 0:
+        raise ValueError(f"n_attempts must be positive, got {n_attempts}")
+    if payloads.ndim != 1:
+        raise ValueError(f"payloads must be a [C] vector, got {payloads.shape}")
+    c = payloads.shape[0]
+    block = min(block, n_attempts)
+    n_blocks = -(-n_attempts // block)
+    seed = jnp.stack([jnp.asarray(prev_hash, jnp.uint32),
+                      jnp.asarray(nonce_offset, jnp.uint32)])
+    best_h, best_n = pl.pallas_call(
+        functools.partial(_pow_race_kernel, block=block,
+                          n_attempts=n_attempts),
+        grid=(c, n_blocks),
+        in_specs=[pl.BlockSpec((2,), lambda ci, j: (0,)),
+                  pl.BlockSpec((1,), lambda ci, j: (ci,))],
+        out_specs=[pl.BlockSpec((1,), lambda ci, j: (ci,)),
+                   pl.BlockSpec((1,), lambda ci, j: (ci,))],
+        out_shape=[jax.ShapeDtypeStruct((c,), jnp.uint32),
+                   jax.ShapeDtypeStruct((c,), jnp.uint32)],
+        interpret=interpret,
+    )(seed, jnp.asarray(payloads, jnp.uint32))
+    return best_h, best_n

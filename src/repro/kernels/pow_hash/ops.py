@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mining
-from repro.kernels.pow_hash.kernel import pow_search_kernel
+from repro.kernels.pow_hash.kernel import pow_race_kernel, pow_search_kernel
 from repro.kernels.pow_hash.ref import pow_search_ref
 
 
@@ -18,13 +18,34 @@ def _default_interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("n_attempts", "use_kernel"))
 def mine(prev_hash, payload, client_id, n_attempts: int = 4096, *,
          nonce_offset=0, use_kernel: bool = True):
-    """Single-client nonce race; salts the payload per client like
-    core.mining.pow_search. Returns (best_hash, best_nonce)."""
-    salt = mining._avalanche(jnp.asarray(client_id, jnp.uint32)
-                             * jnp.uint32(2246822519))
+    """Single-client nonce race; salts the payload with
+    ``mining.client_salt`` exactly like core.mining.pow_search. Returns
+    (best_hash, best_nonce)."""
+    salt = mining.client_salt(client_id)
     payload_s = jnp.asarray(payload, jnp.uint32) ^ salt
     if use_kernel:
         return pow_search_kernel(prev_hash, payload_s,
                                  jnp.asarray(nonce_offset, jnp.uint32),
                                  n_attempts, interpret=_default_interpret())
     return pow_search_ref(prev_hash, payload_s, nonce_offset, n_attempts)
+
+
+def pow_race(prev_hash, payload, client_ids, n_attempts: int, *,
+             nonce_offset=0, chunk: int = 2048,
+             interpret: bool | None = None):
+    """The whole Step-3 race on the 2-D (clients × nonce chunks) grid.
+
+    ``client_ids`` is the ``[C]`` uint32 id vector (global ids — sharded
+    callers pass their offset local block); each client's payload is salted
+    with ``mining.client_salt`` so the disjoint-nonce-space contract has the
+    single shared definition. Traceable (called from inside the round scan);
+    returns ``(best_hashes [C], best_nonces [C])`` bitwise equal to
+    ``vmap(mining.pow_search)`` at every ``(n_attempts, chunk)``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    payloads = jnp.asarray(payload, jnp.uint32) ^ mining.client_salt(client_ids)
+    return pow_race_kernel(prev_hash, payloads,
+                           jnp.asarray(nonce_offset, jnp.uint32),
+                           int(n_attempts), block=int(chunk),
+                           interpret=interpret)

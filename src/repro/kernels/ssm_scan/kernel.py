@@ -56,7 +56,10 @@ def ssm_scan(u: jnp.ndarray, dt: jnp.ndarray, bmat: jnp.ndarray,
     ds = a.shape[1]
     tile_t = min(tile_t, t)
     tile_d = min(tile_d, d_in)
-    assert t % tile_t == 0 and d_in % tile_d == 0, (t, tile_t, d_in, tile_d)
+    if t % tile_t or d_in % tile_d:
+        raise ValueError(
+            f"pad to tile multiples: T={t} % tile_t={tile_t} and "
+            f"d_in={d_in} % tile_d={tile_d} must both be 0")
     nt, nd = t // tile_t, d_in // tile_d
 
     kern = functools.partial(_ssm_kernel, tile_t=tile_t)

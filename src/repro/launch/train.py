@@ -62,7 +62,8 @@ def run_mlp(args) -> dict:
         mine_attempts=allocation.mining_iterations(blade.beta),
         difficulty_bits=4, eval_every=args.eval_every,
         topology=topology.from_name(args.topology),
-        fast_allreduce=args.fast_allreduce)
+        fast_allreduce=args.fast_allreduce, use_kernel=args.kernels,
+        fused_mix=args.fused_mix)
     key = jax.random.key(blade.seed)
     src = FLDataSource(key, blade.n_clients, blade.samples_per_client,
                        blade.dirichlet_alpha, seed=blade.seed)
@@ -89,6 +90,7 @@ def run_mlp(args) -> dict:
         "chain_valid": ledger.validate_chain(), "blocks": len(ledger.blocks),
         "devices": mesh.devices.size if mesh is not None else 1,
         "fast_allreduce": spec.fast_allreduce,
+        "dispatch": dict(rounds.LAST_DISPATCH),
         "wall_s": time.time() - t0,
         **spectral_fields(spec, run_key, blade.K),
     }
@@ -104,7 +106,9 @@ def run_arch_smoke(args) -> dict:
                             mine_attempts=256, difficulty_bits=2,
                             eval_every=args.eval_every,
                             topology=topology.from_name(args.topology),
-                            fast_allreduce=args.fast_allreduce)
+                            fast_allreduce=args.fast_allreduce,
+                            use_kernel=args.kernels,
+                            fused_mix=args.fused_mix)
     src = LMDataSource(cfg, shape, args.clients, seed=args.seed)
     key = jax.random.key(args.seed)
     params = registry.init_model(key, cfg)
@@ -126,6 +130,7 @@ def run_arch_smoke(args) -> dict:
         "chain_valid": ledger.validate_chain(),
         "devices": mesh.devices.size if mesh is not None else 1,
         "fast_allreduce": spec.fast_allreduce,
+        "dispatch": dict(rounds.LAST_DISPATCH),
         "wall_s": time.time() - t0,
         **spectral_fields(spec, run_key, args.rounds),
     }
@@ -164,6 +169,19 @@ def main():
                          "data moved, fp32 reassociated — tolerance tier, "
                          "ledger hashes fork from the bitwise engine (see "
                          "docs/architecture.md)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the Steps 3+4 PoW race on the Pallas 2-D "
+                         "(clients x nonce-chunk) grid (kernels/pow_hash). "
+                         "Bitwise-identical results and ledger; "
+                         "run_blade_fl's auto dispatch skips the kernel for "
+                         "tiny mining budgets (docs/architecture.md "
+                         "Kernel dispatch)")
+    ap.add_argument("--fused-mix", action="store_true",
+                    help="fuse dense mixes + the digest/divergence "
+                         "diagnostics into Pallas kernels (kernels/fedavg): "
+                         "one sweep of the broadcast set instead of two. "
+                         "Tolerance tier like --fast-allreduce: ledger "
+                         "hashes fork deterministically")
     ap.add_argument("--devices", type=int, default=0,
                     help="shard the client axis of the scan engine over this "
                          "many devices (0 = single-device; requires "

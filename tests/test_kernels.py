@@ -1,14 +1,26 @@
 """Per-kernel allclose vs pure-jnp oracle, swept over shapes and dtypes
-(interpret=True executes the kernel body on CPU)."""
+(interpret=True executes the kernel body on CPU). The PoW grid section is
+EXACT (uint32 race outcomes, ulp=0 by construction); the fused-mix section is
+tolerance tier (tests/equivalence.py helpers)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from equivalence import assert_trees_close
 from repro.core import mining
-from repro.kernels.fedavg import fedavg_flat, fedavg_flat_ref, fedavg_tree
+from repro.kernels.fedavg import (digest_divergence_tree, fedavg_flat,
+                                  fedavg_flat_ref, fedavg_tree,
+                                  mix_rows_flat, mix_rows_tree)
 from repro.kernels.flash_attention import attention_ref, flash_attention, mha
-from repro.kernels.pow_hash import mine, pow_search_kernel, pow_search_ref
+from repro.kernels.pow_hash import (mine, pow_race, pow_search_kernel,
+                                    pow_search_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +140,266 @@ def test_mine_matches_core_mining():
                                2048)
     assert int(bh) == int(ch)
     assert int(bn) == int(cn)
+
+
+def test_client_salt_is_the_shared_definition():
+    """Both paths salt through mining.client_salt — one definition of the
+    disjoint nonce spaces. The helper must broadcast and equal the inline
+    avalanche it replaced."""
+    ids = jnp.arange(16, dtype=jnp.uint32)
+    want = mining._avalanche(ids * mining._M2)
+    np.testing.assert_array_equal(np.asarray(mining.client_salt(ids)),
+                                  np.asarray(want))
+    # scalar form matches the vector form elementwise
+    assert int(mining.client_salt(jnp.uint32(7))) == int(want[7])
+
+
+# 2-D (clients x nonce chunks) grid race: EXACT uint32 equality (ulp=0)
+# against both the brute-force ref and the chunked fori_loop engine path,
+# including budgets that do not divide the chunk (tail-mask semantics).
+POW_GRID_CASES = [
+    # n_attempts, chunk
+    (4096, 512),     # divisible
+    (3000, 1024),    # non-divisible tail
+    (1500, 1024),    # non-divisible, 2 chunks
+    (100, 64),       # tiny non-divisible
+    (1, 16),         # single attempt, chunk > budget
+    (1000, 384),     # non-divisible, odd chunk
+]
+
+
+@pytest.mark.parametrize("case", POW_GRID_CASES,
+                         ids=lambda c: f"n{c[0]}b{c[1]}")
+def test_pow_race_grid_matches_ref_exact(case):
+    n, chunk = case
+    ids = jnp.arange(5, dtype=jnp.uint32)
+    ph, dig, off = jnp.uint32(123), jnp.uint32(456), jnp.uint32(7 << 10)
+    gh, gn = pow_race(ph, dig, ids, n, nonce_offset=off, chunk=chunk,
+                      interpret=True)
+    rh, rn = jax.vmap(lambda c: pow_search_ref(
+        ph, dig ^ mining.client_salt(c), off, n))(ids)
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(rh))
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(rn))
+
+
+@pytest.mark.parametrize("case", POW_GRID_CASES,
+                         ids=lambda c: f"n{c[0]}b{c[1]}")
+def test_pow_race_grid_matches_fori_loop_exact(case):
+    """Grid vs the engine's vmap(fori_loop) path at the SAME chunk — the
+    bitwise dispatch contract of make_mine(use_kernel=True)."""
+    n, chunk = case
+    ids = jnp.arange(6, dtype=jnp.uint32) + jnp.uint32(3)  # offset ids too
+    ph, dig, off = jnp.uint32(0xDEAD), jnp.uint32(0xBEEF), jnp.uint32(1 << 20)
+    gh, gn = pow_race(ph, dig, ids, n, nonce_offset=off, chunk=chunk,
+                      interpret=True)
+    vh, vn = jax.vmap(lambda c: mining.pow_search(
+        ph, dig, c, n, nonce_offset=off, chunk=chunk))(ids)
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(vh))
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(vn))
+
+
+def test_pow_race_chunk_invariant():
+    """The race outcome is bitwise independent of the grid tile size
+    (running min + first-tie argmin == full-range argmin)."""
+    ids = jnp.arange(4, dtype=jnp.uint32)
+    outs = [pow_race(jnp.uint32(5), jnp.uint32(9), ids, 3000,
+                     nonce_offset=0, chunk=c, interpret=True)
+            for c in (64, 500, 1024, 3000)]
+    for h, n in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(outs[0][0]))
+        np.testing.assert_array_equal(np.asarray(n), np.asarray(outs[0][1]))
+
+
+def test_pow_race_rejects_bad_budget():
+    ids = jnp.arange(2, dtype=jnp.uint32)
+    with pytest.raises(ValueError):
+        pow_race(jnp.uint32(1), jnp.uint32(2), ids, 0, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# fused mix (row-block matmul) + fused digest/divergence — tolerance tier
+# ---------------------------------------------------------------------------
+
+
+MIX_CASES = [
+    # C, R, N, block_n
+    (8, 8, 1000, 512),
+    (6, 2, 333, 64),      # row subset + non-divisible N
+    (20, 5, 5000, 2048),
+    (4, 4, 7, 16),        # N smaller than the block
+]
+
+
+@pytest.mark.parametrize("case", MIX_CASES,
+                         ids=lambda c: f"C{c[0]}R{c[1]}N{c[2]}")
+def test_mix_rows_flat_matches_dense(case):
+    c, r, n, block = case
+    ks = jax.random.split(jax.random.key(c * n), 2)
+    w = jax.nn.softmax(jax.random.normal(ks[0], (c, c)), axis=1)[:r]
+    x = jax.random.normal(ks[1], (c, n))
+    out = mix_rows_flat(w, x, block_n=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w @ x),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mix_rows_flat_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        mix_rows_flat(jnp.zeros((2, 3)), jnp.zeros((4, 5)), interpret=True)
+
+
+def test_mix_gather_kernel_matches_aggregation_mix():
+    """fused-mix-vs-aggregation.mix at the tolerance tier (the fused kernel's
+    contraction order replaces XLA's)."""
+    from repro.core import aggregation
+    key = jax.random.key(0)
+    p = {"a": jax.random.normal(key, (6, 10, 3)),
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 7)),
+         "c": jax.random.normal(jax.random.fold_in(key, 2), (6, 2, 2, 5))}
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (6, 6)),
+                       axis=1)
+    weights = jnp.arange(1.0, 7.0)
+    got = aggregation.mix_gather(p, w, weights, use_kernel=True,
+                                 interpret=True)
+    want = aggregation.mix(p, w, weights)
+    assert_trees_close(got, want, rtol=1e-5, atol=1e-6)
+    # mix_psum_dense's single-device use_kernel form routes the same way
+    got2 = aggregation.mix_psum_dense(p, w, weights, use_kernel=True,
+                                      interpret=True)
+    assert_trees_close(got2, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_rows_tree_row_subset_shapes():
+    p = {"a": jnp.ones((4, 3, 2)), "b": jnp.ones((4, 5))}
+    w_rows = jnp.full((2, 4), 0.25)
+    out = mix_rows_tree(p, w_rows, interpret=True)
+    assert out["a"].shape == (2, 3, 2) and out["b"].shape == (2, 5)
+
+
+def test_digest_divergence_fused_sweep():
+    """One fused sweep == digest_tree + client_divergence up to the
+    documented contract: divergence to fp32 tolerance; the digest is
+    deterministic and model-sensitive but FORKS from the jnp fold (tile
+    partials reassociate the leaf sums)."""
+    from repro.core import aggregation
+    key = jax.random.key(1)
+    p = {"w1": jax.random.normal(key, (8, 33, 5)),
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (8, 9))}
+    dig, div = digest_divergence_tree(p, interpret=True)
+    np.testing.assert_allclose(float(div),
+                               float(aggregation.client_divergence(p)),
+                               rtol=1e-5)
+    dig2, _ = digest_divergence_tree(p, interpret=True)
+    assert int(dig) == int(dig2)          # deterministic
+    p_shift = jax.tree.map(lambda x: x + 1e-2, p)
+    dig3, _ = digest_divergence_tree(p_shift, interpret=True)
+    assert int(dig) != int(dig3)          # fingerprints the model
+
+
+# ---------------------------------------------------------------------------
+# round-loop regressions: make_mine(use_kernel=True) vs the seed path
+# ---------------------------------------------------------------------------
+
+
+def _round_setup(c=6, samples=24):
+    from repro.data.pipeline import FLDataSource
+    from repro.models.mlp import init_mlp
+    key = jax.random.key(0)
+    src = FLDataSource(key, c, samples, seed=0)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    return params, src.static_batch(), jax.random.fold_in(key, 2)
+
+
+def test_round_loop_pow_kernel_bitwise_vs_seed():
+    """The whole K-round engine with the Pallas PoW grid is bitwise the
+    fori_loop engine: params, every metric, every ledger hash — at a
+    non-divisible (mine_attempts, mine_chunk)."""
+    import dataclasses
+    from repro.core import rounds, topology
+    from repro.models.mlp import mlp_loss
+    params, batch, rk = _round_setup()
+    spec = rounds.RoundSpec(n_clients=6, tau=2, eta=0.1, n_lazy=1,
+                            sigma2=0.01, mine_attempts=1000,
+                            difficulty_bits=2, mine_chunk=384,
+                            topology=topology.from_name("random:0.8"))
+    spec_k = dataclasses.replace(spec, use_kernel=True, kernel_interpret=True)
+    s0, h0, l0 = rounds.run_blade_fl_scan(mlp_loss, spec, params, batch,
+                                          rk, 3)
+    s1, h1, l1 = rounds.run_blade_fl_scan(mlp_loss, spec_k, params, batch,
+                                          rk, 3)
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h0 == h1
+    assert [b.header_hash for b in l0.blocks] == \
+           [b.header_hash for b in l1.blocks]
+    assert l1.validate_chain()
+
+
+@pytest.mark.slow
+def test_round_loop_pow_kernel_4device_regression_subprocess():
+    """make_mine(use_kernel=True)-vs-seed on the 4-fake-device lane: the
+    client-sharded scan with the Pallas PoW grid reproduces the single-device
+    seed path (use_kernel=False) bit for bit — params, history, ledger."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import dataclasses, json, math
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+
+        C, K = 8, 3
+        key = jax.random.key(0)
+        src = FLDataSource(key, C, samples_per_client=32, seed=0)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+        rk = jax.random.fold_in(key, 2)
+
+        def eqf(a, b):
+            return a == b or (isinstance(a, float)
+                              and math.isnan(a) and math.isnan(b))
+
+        out = {}
+        for name, topo in [("full_mesh", topology.FullMesh()),
+                           ("random_graph", topology.RandomGraph(p_link=0.6)),
+                           ("ring1", topology.Ring(neighbors=1))]:
+            spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1, n_lazy=1,
+                                    sigma2=0.05, mine_attempts=1000,
+                                    difficulty_bits=2, mine_chunk=384,
+                                    topology=topo)
+            spec_k = dataclasses.replace(spec, use_kernel=True,
+                                         kernel_interpret=True)
+            batch = src.static_batch()
+            st1, h1, l1 = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, rk, K)          # seed path
+            st2, h2, l2 = rounds.run_blade_fl_scan(
+                mlp_loss, spec_k, params, batch, rk, K, mesh=mesh)
+            out[name] = {
+                "params_bitwise": all(
+                    bool((np.asarray(a) == np.asarray(b)).all())
+                    for a, b in zip(jax.tree.leaves(st1.params),
+                                    jax.tree.leaves(st2.params))),
+                "history_bitwise": all(
+                    eqf(a[k], b[k]) for a, b in zip(h1, h2) for k in a),
+                "ledger_bitwise": [b.header_hash for b in l1.blocks]
+                    == [b.header_hash for b in l2.blocks],
+                "chain_valid": l2.validate_chain(),
+            }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for name, r in res.items():
+        assert r["params_bitwise"], (name, r)
+        assert r["history_bitwise"], (name, r)
+        assert r["ledger_bitwise"], (name, r)
+        assert r["chain_valid"], (name, r)
 
 
 # ---------------------------------------------------------------------------

@@ -198,3 +198,94 @@ def test_detection_inside_round():
     st0, m0 = fn0(st0, src.round_batch(0))
     st0, m0 = fn0(st0, src.round_batch(1))
     assert int(m0["n_suspects"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# auto dispatch: loop-vs-scan-vs-kernel on problem size
+# ---------------------------------------------------------------------------
+
+
+def _batch(c, samples):
+    return {"x": jnp.zeros((c, samples, 4)), "y": jnp.zeros((c, samples),
+                                                            jnp.int32)}
+
+
+def test_dispatch_micro_sim_takes_loop():
+    spec = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, mine_attempts=64)
+    plan = rounds.dispatch_plan(spec, _batch(4, 16), 3)
+    assert plan["driver"] == "loop"
+    assert "micro" in plan["reason"]
+
+
+def test_dispatch_paper_scale_takes_scan():
+    spec = rounds.RoundSpec(n_clients=20, tau=2, eta=0.1, mine_attempts=64)
+    plan = rounds.dispatch_plan(spec, _batch(20, 512), 10)
+    assert plan["driver"] == "scan"
+    # a micro client count with a real batch is NOT micro
+    spec4 = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, mine_attempts=64)
+    assert rounds.dispatch_plan(spec4, _batch(4, 512), 3)["driver"] == "scan"
+
+
+def test_dispatch_callable_and_nojit_force_loop():
+    spec = rounds.RoundSpec(n_clients=20, tau=2, eta=0.1, mine_attempts=64)
+    assert rounds.dispatch_plan(spec, lambda k: None, 3)["driver"] == "loop"
+    assert rounds.dispatch_plan(spec, _batch(20, 512), 3,
+                                jit=False)["driver"] == "loop"
+
+
+def test_dispatch_pow_kernel_needs_budget():
+    big = rounds.RoundSpec(n_clients=8, tau=1, eta=0.1, mine_attempts=4096,
+                           use_kernel=True)
+    tiny = rounds.RoundSpec(n_clients=8, tau=1, eta=0.1, mine_attempts=64,
+                            use_kernel=True)
+    off = rounds.RoundSpec(n_clients=8, tau=1, eta=0.1, mine_attempts=4096)
+    b = _batch(8, 512)
+    assert rounds.dispatch_plan(big, b, 3)["pow"] == "kernel"
+    assert rounds.dispatch_plan(tiny, b, 3)["pow"] == "fori_loop"  # downgrade
+    assert rounds.dispatch_plan(off, b, 3)["pow"] == "fori_loop"
+    assert rounds.dispatch_plan(big, b, 3)["mix"] == "jnp"
+    fused = rounds.RoundSpec(n_clients=8, tau=1, eta=0.1, mine_attempts=64,
+                             fused_mix=True)
+    assert rounds.dispatch_plan(fused, b, 3)["mix"] == "fused"
+
+
+def test_dispatch_micro_loop_matches_scan_bitwise():
+    """The micro-sim loop shortcut is results-safe: run_blade_fl's loop
+    dispatch reproduces the direct scan engine bit for bit."""
+    key = jax.random.key(3)
+    src = FLDataSource(key, 4, samples_per_client=16)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=4, tau=2, eta=0.1, mine_attempts=64)
+    batch = src.static_batch()
+    rk = jax.random.fold_in(key, 2)
+    st_l, h_l, led_l = rounds.run_blade_fl(mlp_loss, spec, params, batch,
+                                           rk, 3)
+    assert rounds.LAST_DISPATCH["driver"] == "loop"  # recorded decision
+    st_s, h_s, led_s = rounds.run_blade_fl_scan(mlp_loss, spec, params,
+                                                batch, rk, 3)
+    for a, b in zip(jax.tree.leaves(st_l.params),
+                    jax.tree.leaves(st_s.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [b.header_hash for b in led_l.blocks] == \
+        [b.header_hash for b in led_s.blocks]
+
+
+def test_dispatch_small_budget_downgrades_use_kernel():
+    """run_blade_fl honours the pow downgrade: use_kernel with a tiny budget
+    runs the fori_loop path (bitwise identical anyway) and records it."""
+    import dataclasses
+    key = jax.random.key(5)
+    src = FLDataSource(key, 4, samples_per_client=16)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, mine_attempts=64,
+                            use_kernel=True, kernel_interpret=True)
+    _, h_k, led_k = rounds.run_blade_fl(mlp_loss, spec, params,
+                                        src.static_batch(),
+                                        jax.random.fold_in(key, 2), 2)
+    assert rounds.LAST_DISPATCH["pow"] == "fori_loop"
+    seed = dataclasses.replace(spec, use_kernel=False, kernel_interpret=None)
+    _, h_s, led_s = rounds.run_blade_fl(mlp_loss, seed, params,
+                                        src.static_batch(),
+                                        jax.random.fold_in(key, 2), 2)
+    assert [b.header_hash for b in led_k.blocks] == \
+        [b.header_hash for b in led_s.blocks]
