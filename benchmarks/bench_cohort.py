@@ -1,0 +1,128 @@
+"""Cohort-sampled population scaling: rounds/sec and mix memory vs
+C_enrolled.
+
+The dense engine's Steps 2+5 mix is a ``[C, C]`` matmul and its carry is a
+``[C, ...]`` stack — both priced by the ENROLLED count. The cohort driver
+(``core.rounds.run_blade_fl_cohort``) prices the round by the ACTIVE cohort
+instead: devices hold the ``[A, ...]`` cohort stack, the intra-cohort mix is
+the sparse gather + ``segment_sum`` path at O(A·deg), and the enrolled
+population lives in the host-side lazy ``PopulationStore``. This bench holds
+A = 64 fixed and scales C_enrolled over {64, 1k, 10k} — the point being that
+the timed column barely moves while the dense-mix column grows as
+C_enrolled².
+
+Reported per C_enrolled:
+  * rounds/sec of the cohort driver (compile round excluded — the runner is
+    warmed at the same spec before timing);
+  * analytic peak mix bytes: dense ``[C_enrolled, C_enrolled]`` fp32 matrix
+    vs the segment path's edge lists + gathered neighbor rows
+    (O(A·deg·model), independent of C_enrolled);
+  * the store's touched-client count and materialized bytes (host memory is
+    O(touched·model), not O(C_enrolled·model)).
+
+  PYTHONPATH=src python -m benchmarks.bench_cohort [--rounds 6]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import rounds, topology
+from repro.models.mlp import init_mlp, mlp_loss
+
+# tiny substrate: the bench measures driver + mix scaling, not training, so
+# the model is ~1 KB and each client's local batch is 8 x 16 features
+_IN_DIM, _HIDDEN, _SAMPLES = 16, 8, 8
+_COHORT = 64
+_DEGREE = 5  # ring_neighbors(A, 2) rows: 4 neighbors + the diagonal
+
+
+def _batch_fn(key):
+    """(round_idx, cohort_idx) -> [A, m, ...]: deterministic synthetic data,
+    built per cohort — nothing of shape [C_enrolled, ...] ever exists."""
+    def fn(round_idx, cohort_idx):
+        ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.asarray(cohort_idx, jnp.int32))
+        x = jax.vmap(lambda k: jax.random.normal(
+            k, (_SAMPLES, _IN_DIM), jnp.float32))(ks)
+        y = jax.vmap(lambda k: jax.random.randint(
+            k, (_SAMPLES,), 0, 10))(ks)
+        return {"x": x, "y": y.astype(jnp.int32)}
+    return fn
+
+
+def _param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def bench(n_rounds: int = 6, seed: int = 0) -> dict:
+    key = jax.random.key(seed)
+    params = init_mlp(jax.random.fold_in(key, 1), in_dim=_IN_DIM,
+                      hidden=_HIDDEN)
+    pbytes = _param_bytes(params)
+    spec = rounds.RoundSpec(
+        n_clients=_COHORT, tau=2, eta=0.05, mine_attempts=32,
+        difficulty_bits=2,
+        # explicit edge list -> the segment (gather + segment_sum) mix
+        topology=topology.ExplicitSparse(
+            neighbors=topology.ring_neighbors(_COHORT, 2)))
+    batch_fn = _batch_fn(jax.random.fold_in(key, 3))
+    run_key = jax.random.fold_in(key, 2)
+
+    results = {}
+    print(f"{'C_enrolled':>10} {'rounds/s':>9} {'dense_mix_MB':>12} "
+          f"{'segment_mix_KB':>14} {'touched':>7} {'store_KB':>8}")
+    for c_enrolled in (64, 1_000, 10_000):
+        cohort = topology.CohortSchedule(n_enrolled=c_enrolled,
+                                         cohort_size=_COHORT)
+        # warm the (lru-cached) runner at this spec so the timed window
+        # holds zero compiles — one throwaway round on a scratch store
+        rounds.run_blade_fl_cohort(mlp_loss, spec, params, batch_fn,
+                                   run_key, 1, cohort)
+        t0 = time.time()
+        store, hist, ledger = rounds.run_blade_fl_cohort(
+            mlp_loss, spec, params, batch_fn, run_key, n_rounds, cohort)
+        wall = time.time() - t0
+        if not ledger.validate_chain():
+            raise RuntimeError(f"chain invalid at C_enrolled={c_enrolled}")
+        # analytic peaks: what the dense engine WOULD allocate vs what the
+        # segment mix actually touches (edge ids+weights, gathered rows)
+        dense_mix = 4 * c_enrolled * c_enrolled
+        # per edge: int32 neighbor id + fp32 weight, plus the gathered row
+        segment_mix = _COHORT * _DEGREE * (8 + pbytes)
+        rps = n_rounds / wall
+        results[f"C{c_enrolled}"] = {
+            "n_enrolled": c_enrolled, "cohort": _COHORT,
+            "rounds_per_s": rps,
+            "dense_mix_bytes": dense_mix,
+            "segment_mix_bytes": segment_mix,
+            "touched": store.touched,
+            "store_bytes": store.materialized_bytes(),
+            "final_local_loss": hist[-1]["local_loss_mean"],
+        }
+        print(f"{c_enrolled:>10} {rps:>9.2f} {dense_mix / 1e6:>12.2f} "
+              f"{segment_mix / 1e3:>14.1f} {store.touched:>7} "
+              f"{store.materialized_bytes() / 1e3:>8.1f}")
+        common.csv_line(
+            f"cohort_C{c_enrolled}_A{_COHORT}",
+            1e6 * wall / n_rounds,
+            f"rounds_per_s={rps:.2f},dense_mix_mb={dense_mix / 1e6:.2f},"
+            f"segment_mix_kb={segment_mix / 1e3:.1f},"
+            f"touched={store.touched}")
+    return results
+
+
+def run():
+    return bench()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    bench(a.rounds, a.seed)

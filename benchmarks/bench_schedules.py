@@ -42,6 +42,13 @@ def schedules(n_clients: int):
         ("alt_ring3_mesh1", topology.AlternatingSchedule(
             ((topology.Ring(neighbors=1), 3), (topology.FullMesh(), 1)))),
         ("snr_fade8", topology.LinkQualitySchedule(fading_period=8)),
+        # sparse segment-mix path: same ring-2 graph as an explicit edge
+        # list, so its row goes through mix_segment in the engine and
+        # through the SparseLowering densify guard in the spectral
+        # diagnostics (small C — spectral._densify raises past
+        # DENSIFY_MAX_CLIENTS by design)
+        ("sparse_ring2", topology.ExplicitSparse(
+            neighbors=topology.ring_neighbors(n_clients, 2))),
     )
 
 

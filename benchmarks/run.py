@@ -18,9 +18,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import (bench_kernels, bench_multidevice, bench_rounds,  # noqa: E402
-                        bench_schedules, bench_topology, paper_tables,
-                        roofline)
+from benchmarks import (bench_cohort, bench_kernels, bench_multidevice,  # noqa: E402
+                        bench_rounds, bench_schedules, bench_topology,
+                        paper_tables, roofline)
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                    "bench_results.json")
@@ -30,7 +30,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,table2,...,fig10,kernels,rounds,"
-                         "topology,schedules,multidevice,roofline")
+                         "topology,schedules,cohort,multidevice,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="mnist proxy only (skip fashion)")
     ap.add_argument("--seed", type=int, default=0)
@@ -71,6 +71,8 @@ def main() -> None:
         results["topology_loss_vs_k"] = bench_topology.bench()
     if only is None or "schedules" in only:
         results["schedules_loss_vs_k"] = bench_schedules.bench()
+    if only is None or "cohort" in only:
+        results["cohort_population_scaling"] = bench_cohort.bench()
     if only is None or "multidevice" in only:
         results["multidevice_rounds_per_s"] = bench_multidevice.bench()
     if only is None or "roofline" in only:

@@ -1,0 +1,71 @@
+"""Cohort sampling: a 5,000-client enrolled population on one CPU.
+
+The paper's experiments run every enrolled client every round — fine at
+N = 20, impossible at federated-population scale where a [C, C] mixing
+matrix alone would be gigabytes. The cohort driver keeps the paper's
+integrated round (local training, lazy/DP perturbation, gossip mix, PoW
+race, hash-linked ledger) but runs it on a per-round COHORT of A clients
+drawn from the enrolled population: devices only ever hold the [A, ...]
+stack, the intra-cohort mix is the sparse O(A·deg) segment path, and the
+population lives in a lazy host-side store that materializes a client's
+row only after it first participates.
+
+Cohort membership is drawn from the engine's own per-round topology key
+stream, so ``rounds.topology_keys(run_key, K)`` replays exactly which
+clients were active each round — the same replayability contract the
+stochastic topologies have.
+
+  PYTHONPATH=src python examples/cohort_population.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import rounds, topology
+from repro.data.pipeline import CohortDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+def main():
+    n_enrolled, cohort_size, k_rounds = 5_000, 8, 6
+    key = jax.random.key(0)
+    data = CohortDataSource(key, samples_per_client=64, dirichlet_alpha=0.2)
+    params = init_mlp(jax.random.fold_in(key, 1))
+
+    # Pareto(1.5) participation weights: a heavy head of frequently-online
+    # clients and a long tail that almost never joins — the realistic
+    # availability skew uniform sampling papers over.
+    cohort = topology.CohortSchedule.from_spec(
+        n_enrolled, cohort_size, "pareto:1.5")
+    spec = rounds.RoundSpec(n_clients=cohort_size, tau=4, eta=0.1,
+                            mine_attempts=64, difficulty_bits=2,
+                            topology=topology.FullMesh())
+
+    run_key = jax.random.fold_in(key, 2)
+    store, hist, ledger = rounds.run_blade_fl_cohort(
+        mlp_loss, spec, params, data.cohort_batch, run_key, k_rounds, cohort)
+
+    print(f"{'round':>5} {'cohort (client ids)':>34} {'local_loss':>10}")
+    for k, h in enumerate(hist):
+        ids = ",".join(str(i) for i in h["cohort"])
+        print(f"{k:>5} {ids:>34} {h['local_loss_mean']:>10.4f}")
+
+    # replay check: the published key stream reproduces every membership
+    keys = rounds.topology_keys(run_key, k_rounds)
+    replayed = [[int(i) for i in cohort.cohort_at(kt)] for kt in keys]
+    assert replayed == [h["cohort"] for h in hist]
+
+    print(f"\nenrolled {n_enrolled}, cohort {cohort_size}, {k_rounds} rounds")
+    print(f"clients ever active: {store.touched} "
+          f"(host stores {store.materialized_bytes() / 1e6:.1f} MB, "
+          f"not {n_enrolled} model copies)")
+    print(f"chain valid: {ledger.validate_chain()} "
+          f"({len(ledger.blocks)} blocks)")
+    print("cohort replay from rounds.topology_keys: exact")
+
+
+if __name__ == "__main__":
+    main()

@@ -397,6 +397,70 @@ def mix_gather(params, W: jnp.ndarray, weights: Optional[jnp.ndarray] = None,
     return client_local_rows(mixed, axis_name, n_shards)
 
 
+def mix_segment(params, neighbor_idx, edge_w, *, axis_name: AxisName = None,
+                n_shards: int = 1, full=None):
+    """Sparse-topology mix: neighbor gather + ``jax.ops.segment_sum``.
+
+    ``neighbor_idx``/``edge_w`` are the FULL ``[C, D]`` edge-list form of the
+    mixing matrix (``topology.SparseLowering``, padded to max degree ``D``
+    with weight-0 self-edges): client ``i`` adopts
+    ``sum_d edge_w[i, d] * params[neighbor_idx[i, d]]``. Work and the
+    gathered working set are O(C·D) — for a topology whose degree is ≪ C
+    this replaces the dense ``mix`` matmul's O(C²) row contraction, which is
+    what lets cohort populations scale past toy C.
+
+    Sharded, each shard slices its local ROW block of the edge lists (same
+    shard-index slicing as ``mix_psum_dense``), gathers only the flattened
+    neighbor rows it references out of the broadcast set (``full`` reuses
+    the communicate stage's gather), and segment-sums into its own
+    ``C/D_shards`` outputs — no cross-shard reduction at all, so unlike the
+    psum tier there is no partial-sum reassociation: each output row's sum
+    runs in the same ascending-neighbor order on every shard layout. Like
+    every mix, accumulation is fp32 with a round-trip to the leaf dtype.
+
+    Association caveat: XLA's scatter-add (`segment_sum`) does not promise
+    the dense matmul's contraction order, so sparse-vs-dense agreement is
+    pinned at the TOLERANCE tier (tests/test_sparse_mix.py); sharded-vs-
+    single-device sparse agreement is bitwise (identical per-row segment
+    reductions either way).
+
+    >>> import jax.numpy as jnp
+    >>> p = {"w": jnp.arange(3.0).reshape(3, 1)}
+    >>> idx = jnp.array([[0, 1], [0, 1], [2, 2]])
+    >>> ew = jnp.array([[0.5, 0.5], [0.5, 0.5], [1.0, 0.0]])
+    >>> [float(v) for v in mix_segment(p, idx, ew)["w"].ravel()]
+    [0.5, 0.5, 2.0]
+    """
+    idx_full = jnp.asarray(neighbor_idx, jnp.int32)
+    w_full = jnp.asarray(edge_w, jnp.float32)
+    c, d = idx_full.shape
+    if axis_name is None:
+        source = params if full is None else full
+        idx_loc, w_loc = idx_full, w_full
+        n_rows = c
+    else:
+        source = client_all_gather(params, axis_name) if full is None \
+            else full
+        shard = client_shard_index(axis_name)
+        n_rows = c // n_shards
+        idx_loc = jax.lax.dynamic_slice_in_dim(idx_full, shard * n_rows,
+                                               n_rows, axis=0)
+        w_loc = jax.lax.dynamic_slice_in_dim(w_full, shard * n_rows,
+                                             n_rows, axis=0)
+    seg_ids = jnp.repeat(jnp.arange(n_rows, dtype=jnp.int32), d)
+    src_rows = idx_loc.reshape(-1)
+    w_flat = w_loc.reshape(-1)
+
+    def one(p_leaf, s_leaf):
+        flat = s_leaf.astype(jnp.float32).reshape((s_leaf.shape[0], -1))
+        gathered = jnp.take(flat, src_rows, axis=0)       # [n_rows·D, F]
+        mixed = jax.ops.segment_sum(gathered * w_flat[:, None], seg_ids,
+                                    num_segments=n_rows)
+        return mixed.reshape(p_leaf.shape).astype(p_leaf.dtype)
+
+    return jax.tree.map(one, params, source)
+
+
 # ---------------------------------------------------------------------------
 # Opt-in psum fast tier (reassociates fp32 — tolerance tier, not bitwise)
 # ---------------------------------------------------------------------------

@@ -185,6 +185,20 @@ class RoundSpec:
     fused_mix: bool = False
     kernel_interpret: Optional[bool] = None
     mine_chunk: int = 1024
+    # Sparse mix dispatch (docs/architecture.md §Sparse lowering):
+    #   None (auto) — GATHER-kind topologies whose exported SparseLowering
+    #     has padded max degree ≪ C (max_degree * _SEGMENT_DEGREE_FACTOR
+    #     <= n_clients) reroute their mix through aggregation.mix_segment —
+    #     O(C·deg) gather + segment_sum instead of the dense O(C²) matmul.
+    #     ExplicitSparse topologies (SEGMENT kind) always mix here. Every
+    #     shipped small-C config keeps its dense path (and its bits).
+    #   True — force the segment mix (ValueError when the topology exports
+    #     no static sparse form). Sparse-vs-dense agreement is tolerance
+    #     tier (segment_sum's scatter order replaces the matmul's
+    #     contraction order), so forcing it forks ledger hashes
+    #     deterministically, like fast_allreduce.
+    #   False — never, even for ExplicitSparse (its small-C dense fallback).
+    sparse_mix: Optional[bool] = None
 
 
 class RoundState(NamedTuple):
@@ -328,6 +342,51 @@ def make_perturb(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     return perturb
 
 
+# Auto sparse-mix crossover: reroute a GATHER mix through segment_sum only
+# when the padded max degree is ≪ C — degree * 8 <= C keeps every shipped
+# small-C config (C <= 20, windows/active sets >= C/8) on its dense bitwise
+# path while cohort-scale populations (deg 64, C 10k) go sparse.
+_SEGMENT_DEGREE_FACTOR = 8
+
+
+def segment_lowering(spec: RoundSpec
+                     ) -> Optional[topology_lib.SparseLowering]:
+    """The SparseLowering the communicate stage will mix through, or None
+    when this spec mixes densely (see ``RoundSpec.sparse_mix``). Pure
+    function of the spec — ``make_communicate`` dispatches on it and
+    ``dispatch_plan`` reports it, one decision surface for both."""
+    if spec.sparse_mix is False:
+        return None
+    topo = spec.topology
+    kind = topo.lowering(spec.n_clients,
+                         fast_allreduce=spec.fast_allreduce).kind
+    # mirror make_communicate's |D_i| reroute: weighted permute lowerings
+    # fall back to the dense-matrix kind before sparse dispatch is judged
+    if spec.data_weights is not None and \
+            kind == topology_lib.NEIGHBOR_PERMUTE:
+        kind = topology_lib.GATHER
+    if kind == topology_lib.SEGMENT:
+        return topo.sparse_lowering(spec.n_clients)
+    if spec.sparse_mix is True:
+        sp = topo.sparse_lowering(spec.n_clients)
+        if sp is None:
+            raise ValueError(
+                f"sparse_mix=True but {type(topo).__name__} exports no "
+                "static sparse lowering (stochastic topologies and "
+                "schedules change their graph per round; very large C "
+                "cannot be densified to derive one)")
+        return sp
+    # auto: only GATHER-kind dense mixes, and never preempt the opt-in
+    # psum/fused tiers the user asked for explicitly
+    if kind != topology_lib.GATHER or spec.fast_allreduce or spec.fused_mix:
+        return None
+    sp = topo.sparse_lowering(spec.n_clients)
+    if sp is not None and \
+            sp.max_degree * _SEGMENT_DEGREE_FACTOR <= spec.n_clients:
+        return sp
+    return None
+
+
 def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     """Steps 2+5 stage factory: ``(params, prev_params, k_topo, round_idx)
     -> (mixed_params, digest, divergence, extra_metrics)``.
@@ -406,10 +465,19 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     # uniform window weights, so weighted mixes go through the dense matrix.
     if weights is not None and kind == topology_lib.NEIGHBOR_PERMUTE:
         kind = topology_lib.GATHER
+    # sparse segment mix (RoundSpec.sparse_mix): the edge lists are static
+    # host arrays baked into the trace; |D_i| reweighting folds into the
+    # edge weights here so the traced mix is one gather + segment_sum.
+    seg = segment_lowering(spec)
+    if seg is not None and spec.data_weights is not None:
+        seg = seg.reweighted(np.asarray(spec.data_weights, np.float32))
+    seg_idx = seg.neighbor_idx if seg is not None else None
+    seg_w = seg.edge_w if seg is not None else None
     # the opt-in psum tier covers the dense kinds only (permute lowerings
-    # already move O(window) data and stay bitwise)
-    fast_dense = spec.fast_allreduce and kind in (topology_lib.PSUM,
-                                                  topology_lib.GATHER)
+    # already move O(window) data and stay bitwise); a forced segment mix
+    # takes precedence — it moves O(C·deg), less than the psum's O(C)
+    fast_dense = (spec.fast_allreduce and seg is None
+                  and kind in (topology_lib.PSUM, topology_lib.GATHER))
     psum_weights = weights
     if kind == topology_lib.PSUM and not topo.is_full_mesh:
         row = jnp.asarray(topo.uniform_row(spec.n_clients), jnp.float32)
@@ -495,7 +563,14 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
             suspects, _ = detection.detect_lazy_round(
                 full, prev_full, threshold_frac=spec.detect_threshold)
             extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-        if kind == topology_lib.ALL_REDUCE:
+        if seg is not None:
+            # sparse segment mix: O(C·deg) gather + segment_sum over the
+            # broadcast set (reuses the diagnostics gather); |D_i| weights
+            # were folded into seg_w at factory-build time
+            params = aggregation.mix_segment(params, seg_idx, seg_w,
+                                             axis_name=axis_name,
+                                             n_shards=n_shards, full=full)
+        elif kind == topology_lib.ALL_REDUCE:
             params = aggregation.mix_all_reduce(params, weights,
                                                 axis_name=axis_name,
                                                 n_shards=n_shards, full=full)
@@ -726,8 +801,11 @@ def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
         _KERNEL_MIN_ATTEMPTS``), else ``"fori_loop"``. Bitwise identical
         either way.
       ``mix`` — ``"fused"`` (Pallas row-block matmul + one-sweep
-        diagnostics, tolerance tier) when ``spec.fused_mix``, else
-        ``"jnp"``.
+        diagnostics, tolerance tier) when ``spec.fused_mix``;
+        ``"segment"`` when :func:`segment_lowering` reroutes the mix
+        through the sparse gather + ``segment_sum`` path (ExplicitSparse
+        topologies, low-degree GATHER mixes, or ``spec.sparse_mix=True``);
+        else ``"jnp"``.
       ``reason`` — one phrase saying why the driver was chosen.
     """
     plan: Dict[str, str] = {}
@@ -755,7 +833,12 @@ def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
         plan["pow"] = "fori_loop"
     else:
         plan["pow"] = "kernel" if spec.use_kernel else "fori_loop"
-    plan["mix"] = "fused" if spec.fused_mix else "jnp"
+    if spec.fused_mix:
+        plan["mix"] = "fused"
+    elif segment_lowering(spec) is not None:
+        plan["mix"] = "segment"
+    else:
+        plan["mix"] = "jnp"
     return plan
 
 # Jitted runners cached on (loss_fn identity, static config). A weakref
@@ -935,3 +1018,210 @@ def run_blade_fl(loss_fn: LossFn, spec: RoundSpec, params_single, batches,
             entry["global_loss"] = float(np.mean(np.asarray(glosses)))
         history.append(entry)
     return state, history, ledger
+
+
+# ---------------------------------------------------------------------------
+# Cohort-sampled population driver (enrolled C >> active A)
+# ---------------------------------------------------------------------------
+
+
+class PopulationStore:
+    """Host-side parameter store for the enrolled population.
+
+    The cohort driver's memory contract: devices only ever hold the
+    ``[A, ...]`` active-cohort stack; the ``C_enrolled`` population lives
+    here, LAZILY — every client starts as a reference to the shared init
+    model and only materializes its own row after a round it participated
+    in scatters back. Host memory is therefore
+    O(model + touched · model), never O(C_enrolled · model): a
+    10k-population run that ever activates 400 distinct clients stores 401
+    model copies.
+
+    ``gather(idx)`` stacks the cohort's rows into device arrays;
+    ``scatter(idx, cohort_params)`` writes a round's post-mix cohort back
+    (one ``device_get``, rows copied out so no stacked device buffer is
+    pinned).
+    """
+
+    def __init__(self, params_single, n_enrolled: int):
+        if n_enrolled < 1:
+            raise ValueError("PopulationStore needs n_enrolled >= 1")
+        self.n_enrolled = int(n_enrolled)
+        self._init = jax.tree.map(lambda x: np.asarray(x), params_single)
+        self._rows: Dict[int, Any] = {}
+
+    @property
+    def touched(self) -> int:
+        """How many clients have materialized their own row."""
+        return len(self._rows)
+
+    def materialized_bytes(self) -> int:
+        """Host bytes held beyond the shared init model."""
+        row_bytes = sum(x.nbytes for x in jax.tree.leaves(self._init))
+        return row_bytes * self.touched
+
+    def _check_idx(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        if idx.ndim != 1:
+            raise ValueError(f"cohort index must be 1-D, got {idx.shape}")
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n_enrolled):
+            raise ValueError(
+                f"cohort indices must lie in [0, {self.n_enrolled}), got "
+                f"range [{idx.min()}, {idx.max()}]")
+        return idx
+
+    def gather(self, idx) -> Any:
+        """Stack rows ``idx`` into a ``[len(idx), ...]`` device pytree."""
+        idx = self._check_idx(idx)
+        rows = [self._rows.get(int(i), self._init) for i in idx]
+        return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *rows)
+
+    def scatter(self, idx, cohort_params) -> None:
+        """Write a round's post-mix ``[len(idx), ...]`` cohort stack back."""
+        idx = self._check_idx(idx)
+        host = jax.device_get(cohort_params)
+        leads = {x.shape[0] for x in jax.tree.leaves(host)}
+        if leads != {idx.size}:
+            raise ValueError(
+                f"cohort_params leading dims {sorted(leads)} != "
+                f"len(idx)={idx.size}")
+        for a, i in enumerate(idx):
+            self._rows[int(i)] = jax.tree.map(lambda x: np.array(x[a]), host)
+
+
+@functools.lru_cache(maxsize=16)
+def _cohort_round_runner(loss_fn: LossFn, spec: RoundSpec,
+                         n_rounds: Optional[int],
+                         mesh: Optional[Mesh] = None,
+                         plan: Optional["plans_lib.CohortCarryPlan"] = None):
+    """Cached jitted single-round step for the cohort driver. Identical to
+    :func:`_round_runner` single-device (so an ``A == C_enrolled`` cohort
+    run is bitwise the loop driver); with ``mesh``/``plan`` the round body
+    runs inside ``shard_map`` with the ``[A, ...]`` cohort stack sharded
+    over the plan's client axes — the enrolled population never has a
+    device layout at all."""
+    if mesh is None:
+        return _round_runner(loss_fn, spec, n_rounds)
+    from jax.experimental.shard_map import shard_map
+
+    round_fn = make_integrated_round(loss_fn, spec,
+                                     axis_name=plan.client_axes,
+                                     n_shards=plan.n_shards,
+                                     n_rounds=n_rounds)
+    state_specs = RoundState(params=plan.client_spec(), key=P(),
+                             round_idx=P(), prev_hash=P())
+    fn = shard_map(round_fn, mesh=mesh,
+                   in_specs=(state_specs, plan.batch_spec(False)),
+                   out_specs=(state_specs, P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def run_blade_fl_cohort(loss_fn: LossFn, spec: RoundSpec, params_single,
+                        batches, key, n_rounds: int,
+                        cohort: topology_lib.CohortSchedule,
+                        ledger: Optional[chain.Ledger] = None,
+                        store: Optional[PopulationStore] = None,
+                        mesh: Optional[Mesh] = None,
+                        plan: Optional["plans_lib.CohortCarryPlan"] = None):
+    """Cohort-sampled population driver: K rounds over ``C_enrolled``
+    clients of which only an active cohort of ``A = spec.n_clients``
+    participates per round.
+
+    Per round: draw the cohort from the engine's per-round ``k_topo``
+    stream (``cohort.cohort_at`` — so ``topology_keys(key, K)`` replays the
+    memberships), gather the cohort's rows out of the host-side
+    :class:`PopulationStore`, run ONE integrated round — training, lazy/DP
+    perturbation, digest, the intra-cohort topology mix, the PoW race and
+    the hash link, all at cohort size ``A`` — and scatter the post-mix
+    cohort back. The device working set is O(A·model) + the mix's
+    O(A·deg), independent of ``C_enrolled``; nothing of shape
+    ``[C_enrolled, ...]`` (let alone ``[C, C]``) ever exists on device.
+
+    ``spec`` describes the INTRA-cohort round (``spec.n_clients`` must
+    equal ``cohort.cohort_size``): ``spec.topology`` mixes within the
+    round's cohort, lazy/DP/mining semantics are unchanged. The ledger is
+    global — one hash-linked chain across rounds exactly like the other
+    drivers, with the device-side ``prev_hash`` carry crossing rounds
+    through the host mirror. ``PartialParticipation`` population semantics
+    are ``CohortSchedule(..., bias="prefix")`` + ``FullMesh`` intra-cohort:
+    the first ``A`` enrolled clients mix every round and the rest idle —
+    now at O(A) cost instead of a masked dense ``[C, C]`` mix.
+
+    ``batches`` is either a callable ``(round_idx, cohort_idx) ->
+    [A, ...]`` batch pytree (the scalable form — build only the cohort's
+    data) or a static ``[C_enrolled, ...]`` pytree indexed host-side per
+    round. ``key`` follows the exact split chain of the other drivers.
+
+    Returns ``(store, history, ledger)``; each history entry additionally
+    records the round's cohort as ``entry["cohort"]``.
+    """
+    if cohort.cohort_size != spec.n_clients:
+        raise ValueError(
+            f"spec.n_clients={spec.n_clients} must equal "
+            f"cohort.cohort_size={cohort.cohort_size}: the round engine "
+            "runs at cohort size")
+    if store is None:
+        store = PopulationStore(params_single, cohort.n_enrolled)
+    if store.n_enrolled != cohort.n_enrolled:
+        raise ValueError(
+            f"store holds n_enrolled={store.n_enrolled} but the schedule "
+            f"samples from {cohort.n_enrolled}")
+    if callable(batches):
+        batch_fn = batches
+    else:
+        leads = {x.shape[0] for x in jax.tree.leaves(batches)}
+        if leads != {cohort.n_enrolled}:
+            raise ValueError(
+                f"static batches leading dims {sorted(leads)} != "
+                f"n_enrolled={cohort.n_enrolled} (pass a callable "
+                "(round_idx, cohort_idx) -> batch to build per-cohort data)")
+        host_batches = jax.tree.map(np.asarray, batches)
+
+        def batch_fn(k, idx):
+            return jax.tree.map(lambda x: jnp.asarray(x[np.asarray(idx)]),
+                                host_batches)
+
+    if mesh is not None and plan is None:
+        plan = plans_lib.cohort_carry_plan(mesh, cohort.n_enrolled,
+                                           spec.n_clients)
+    decision = dispatch_plan(spec, batches, n_rounds, mesh=mesh)
+    decision.update(driver="cohort",
+                    reason=f"cohort A={cohort.cohort_size} over "
+                           f"C_enrolled={cohort.n_enrolled}")
+    LAST_DISPATCH.clear()
+    LAST_DISPATCH.update(decision)
+    # mirror run_blade_fl's horizon handling so A == C_enrolled cohort runs
+    # reuse (and bitwise match) the loop driver's cached runner
+    horizon = int(n_rounds) if spec.eval_every > 1 else None
+    runner = _cohort_round_runner(loss_fn, spec, horizon, mesh, plan)
+    ledger = ledger if ledger is not None else chain.Ledger()
+    history = []
+    host_key = key
+    prev_hash = jnp.uint32(chain.GENESIS_HASH)
+    for k in range(int(n_rounds)):
+        # host mirror of the round body's split chain (= topology_keys)
+        next_key, _k_lazy, k_dp = jax.random.split(host_key, 3)
+        k_topo = jax.random.fold_in(k_dp, _TOPOLOGY_SALT)
+        idx = np.asarray(cohort.cohort_at(k_topo))
+        state = RoundState(params=store.gather(idx), key=host_key,
+                           round_idx=jnp.int32(k), prev_hash=prev_hash)
+        state, metrics = runner(state, batch_fn(k, idx))
+        store.scatter(idx, state.params)
+        prev_hash = state.prev_hash
+        host_key = next_key
+        block = chain.make_block(
+            index=len(ledger.blocks), prev_hash=ledger.head_hash,
+            model_digest=int(metrics["digest"]), winner=int(metrics["winner"]),
+            nonce=int(metrics["nonce"]), pow_hash=int(metrics["pow_hash"]))
+        ledger.append(block)
+        metrics = dict(metrics)
+        glosses = metrics.pop("global_loss", None)
+        llosses = metrics.pop("local_loss")
+        entry = {k2: float(v) for k2, v in metrics.items()}
+        entry["local_loss_mean"] = float(np.mean(np.asarray(llosses)))
+        if glosses is not None:
+            entry["global_loss"] = float(np.mean(np.asarray(glosses)))
+        entry["cohort"] = [int(i) for i in idx]
+        history.append(entry)
+    return store, history, ledger

@@ -31,8 +31,23 @@ import numpy as np
 from repro.core import topology as topology_lib
 
 
+def _densify(w) -> np.ndarray:
+    """Accept a dense matrix or a ``topology.SparseLowering``.
+
+    Sparse topologies densify for the eigen-diagnostics — SMALL C only:
+    ``SparseLowering.to_dense`` raises ``ValueError`` past
+    ``topology.DENSIFY_MAX_CLIENTS``, because a ``[C, C]`` eigensolve at
+    cohort-population scale is exactly what the sparse path exists to
+    avoid (diagnose the intra-cohort topology at size A instead)."""
+    if isinstance(w, topology_lib.SparseLowering):
+        return np.asarray(w.to_dense(), np.float64)
+    return np.asarray(w, np.float64)
+
+
 def lambda2_modulus(w) -> float:
-    """|lambda_2|: second-largest eigenvalue modulus of a mixing matrix.
+    """|lambda_2|: second-largest eigenvalue modulus of a mixing matrix
+    (dense, or a ``topology.SparseLowering`` densified under the small-C
+    guard).
 
     >>> import numpy as np
     >>> round(lambda2_modulus(np.full((4, 4), 0.25)), 6)   # full mesh
@@ -40,7 +55,7 @@ def lambda2_modulus(w) -> float:
     >>> round(lambda2_modulus(np.eye(3)), 6)               # no communication
     1.0
     """
-    w = np.asarray(w, np.float64)
+    w = _densify(w)
     if w.shape[0] < 2:
         return 0.0
     mags = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
@@ -70,8 +85,20 @@ def round_matrices(topo: topology_lib.Topology, n_clients: int,
 
     ``keys`` (one PRNG key per round, e.g. from ``rounds.topology_keys``)
     is required for stochastic topologies/schedules and reproduces the
-    exact graphs a run drew; deterministic ones ignore it.
+    exact graphs a run drew; deterministic ones ignore it. ``topo`` may
+    also be a raw ``topology.SparseLowering`` — densified once under the
+    small-C guard (see :func:`_densify`).
     """
+    if isinstance(topo, topology_lib.SparseLowering):
+        # a raw edge-list lowering is a static topology: densify once under
+        # the small-C guard (to_dense raises ValueError past
+        # topology.DENSIFY_MAX_CLIENTS) and repeat it
+        if topo.n_clients != n_clients:
+            raise ValueError(
+                f"SparseLowering has n_clients={topo.n_clients}, the report "
+                f"asks for {n_clients}")
+        w = topo.to_dense().astype(np.float64)
+        return [w for _ in range(int(n_rounds))]
     if topo.stochastic and keys is None:
         raise ValueError(
             f"{type(topo).__name__} is stochastic: pass per-round keys "

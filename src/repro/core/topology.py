@@ -70,7 +70,7 @@ spectral quantity connecting a schedule to the paper's bound — the gap
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,18 @@ GATHER = "gather"
 # tolerance equivalence tier, not the bitwise contract
 # (docs/architecture.md §The tolerance tier).
 PSUM = "psum"
+# Sparse kind: per-client neighbor index lists + edge weights
+# (:class:`SparseLowering`), mixed by ``aggregation.mix_segment`` — gather +
+# ``segment_sum``, O(C·deg) instead of the dense O(C²) matmul. Advertised
+# natively by :class:`ExplicitSparse`; the engine also reroutes GATHER
+# topologies here when their exported sparse form has max degree ≪ C
+# (``rounds.segment_lowering``).
+SEGMENT = "segment"
+
+# Largest C for which a sparse topology may be densified back to a [C, C]
+# matrix (SparseLowering.to_dense, spectral diagnostics). 4096² fp32 is
+# 64 MiB — past that the dense form defeats the point of the sparse path.
+DENSIFY_MAX_CLIENTS = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +138,113 @@ class MixLowering:
     offsets: Tuple[int, ...] = ()
     weight: float = 0.0
     offsets_table: Tuple[Tuple[int, ...], ...] = ()
+
+
+class SparseLowering:
+    """Edge-list form of a mixing matrix: ``[C, D]`` neighbor indices + edge
+    weights, padded to the max degree ``D`` for ragged safety.
+
+    ``neighbor_idx[i]`` lists the clients whose models client ``i`` mixes,
+    ``edge_w[i]`` the matching row weights; rows shorter than ``D`` are
+    padded with the client's own index at weight 0 (a harmless self-edge, so
+    padded gathers stay in-bounds and contribute nothing). The represented
+    dense matrix is ``W[i, neighbor_idx[i, d]] += edge_w[i, d]``, and
+    ``aggregation.mix_segment`` applies it in O(C·D) instead of O(C²).
+
+    This is a RUNTIME object, not a spec: it holds raw arrays, is never
+    hashed, and is built at stage-build time from a hashable ``Topology``
+    (``Topology.sparse_lowering`` / :func:`sparse_from_dense`).
+
+    >>> import numpy as np
+    >>> sp = sparse_from_dense(np.asarray(Ring(neighbors=1).matrix(4)))
+    >>> sp.n_clients, sp.max_degree
+    (4, 3)
+    >>> bool(np.allclose(sp.to_dense(), Ring(neighbors=1).matrix(4)))
+    True
+    """
+
+    __slots__ = ("neighbor_idx", "edge_w")
+
+    def __init__(self, neighbor_idx, edge_w):
+        idx = np.asarray(neighbor_idx, np.int32)
+        w = np.asarray(edge_w, np.float32)
+        if idx.ndim != 2 or idx.shape != w.shape:
+            raise ValueError(
+                f"neighbor_idx {idx.shape} and edge_w {w.shape} must be "
+                "matching [n_clients, max_degree] arrays")
+        if idx.shape[1] < 1:
+            raise ValueError("SparseLowering needs max_degree >= 1")
+        if idx.size and (idx.min() < 0 or idx.max() >= idx.shape[0]):
+            raise ValueError(
+                f"neighbor indices must lie in [0, {idx.shape[0]}), got "
+                f"range [{idx.min()}, {idx.max()}]")
+        self.neighbor_idx = idx
+        self.edge_w = w
+
+    @property
+    def n_clients(self) -> int:
+        return self.neighbor_idx.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbor_idx.shape[1]
+
+    def to_dense(self, *,
+                 max_clients: int = DENSIFY_MAX_CLIENTS) -> np.ndarray:
+        """The represented dense ``[C, C]`` matrix — small C only: spectral
+        diagnostics and equivalence tests, never the engine's mix path."""
+        c = self.n_clients
+        if c > max_clients:
+            raise ValueError(
+                f"refusing to densify a SparseLowering with n_clients={c} > "
+                f"{max_clients}: the [C, C] matrix is what the sparse path "
+                "exists to avoid (raise max_clients explicitly if you truly "
+                "want it)")
+        w = np.zeros((c, c), np.float32)
+        rows = np.repeat(np.arange(c), self.max_degree)
+        np.add.at(w, (rows, self.neighbor_idx.reshape(-1)),
+                  self.edge_w.reshape(-1))
+        return w
+
+    def reweighted(self, weights) -> "SparseLowering":
+        """|D_j| data-size reweighting, the edge-list twin of
+        ``aggregation._reweight_rows``: ``w'[i, d] ∝ w[i, d] *
+        weights[neighbor_idx[i, d]]``, renormalized per row."""
+        wvec = np.asarray(weights, np.float32)
+        if wvec.shape != (self.n_clients,):
+            raise ValueError(
+                f"weights shape {wvec.shape} != ({self.n_clients},)")
+        w = self.edge_w * wvec[self.neighbor_idx]
+        return SparseLowering(self.neighbor_idx,
+                              w / w.sum(axis=1, keepdims=True))
+
+
+def sparse_from_dense(w, *, min_degree: int = 1) -> SparseLowering:
+    """Convert a dense mixing matrix to its edge-list form.
+
+    Each row keeps its nonzero entries in ascending column order — the same
+    order the dense matmul's contraction visits them — padded to the max
+    row degree (at least ``min_degree``) with weight-0 self-edges.
+
+    >>> import numpy as np
+    >>> sp = sparse_from_dense(np.eye(3, dtype=np.float32))
+    >>> sp.max_degree
+    1
+    >>> [int(i) for i in sp.neighbor_idx.ravel()]
+    [0, 1, 2]
+    """
+    w = np.asarray(w, np.float32)
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        raise ValueError(f"expected a square [C, C] matrix, got {w.shape}")
+    c = w.shape[0]
+    nz = [np.flatnonzero(w[i]) for i in range(c)]
+    d = max(max((len(r) for r in nz), default=0), min_degree, 1)
+    idx = np.tile(np.arange(c, dtype=np.int32)[:, None], (1, d))
+    ew = np.zeros((c, d), np.float32)
+    for i, cols in enumerate(nz):
+        idx[i, :len(cols)] = cols
+        ew[i, :len(cols)] = w[i, cols]
+    return SparseLowering(idx, ew)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +307,24 @@ class Topology:
         if fast_allreduce and self.uniform_row(n_clients) is not None:
             return MixLowering(kind=PSUM)
         return MixLowering(kind=GATHER)
+
+    def sparse_lowering(self, n_clients: int) -> "SparseLowering | None":
+        """Edge-list export of this topology's mix, or None when no static
+        sparse form exists (stochastic draws, time-varying schedules) or
+        densifying to derive one would defeat the sparse path
+        (``n_clients > DENSIFY_MAX_CLIENTS``). Subclasses whose structure is
+        known analytically (:class:`PartialParticipation`,
+        :class:`ExplicitSparse`) override this to build edges directly in
+        O(C·deg) without ever touching a ``[C, C]`` matrix."""
+        if self.stochastic or isinstance(self, Schedule):
+            return None
+        if n_clients > DENSIFY_MAX_CLIENTS:
+            return None
+        try:
+            w = np.asarray(self.matrix(n_clients))
+        except NotImplementedError:
+            return None
+        return sparse_from_dense(w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +439,32 @@ class PartialParticipation(Topology):
         w[:self.n_active, :self.n_active] = 1.0 / self.n_active
         return jnp.asarray(w)
 
+    def sparse_lowering(self, n_clients: int) -> "SparseLowering | None":
+        """Edges built directly in O(C·n_active) — no dense [C, C] detour,
+        so this stays exportable at any enrolled-population scale. Active
+        rows list the active block in ascending order (the dense matmul's
+        contraction order); inactive rows are degree-1 self-loops padded
+        with weight-0 self-edges."""
+        if self.n_active > n_clients:
+            raise ValueError(
+                f"n_active={self.n_active} exceeds n_clients={n_clients}")
+        a, c = self.n_active, n_clients
+        idx = np.tile(np.arange(c, dtype=np.int32)[:, None], (1, a))
+        ew = np.zeros((c, a), np.float32)
+        idx[:a] = np.arange(a, dtype=np.int32)[None, :]
+        ew[:a] = 1.0 / a
+        ew[a:, 0] = 1.0
+        return SparseLowering(idx, ew)
+
+    def uniform_row(self, n_clients: int):
+        """Never rank-1 for n_active < n_clients — and deriving that via the
+        base class would densify the matrix, which must not happen at
+        enrolled-population scale. n_active == n_clients IS the full mesh's
+        uniform row (cheap to build directly)."""
+        if self.n_active == n_clients:
+            return np.full((n_clients,), 1.0 / n_clients, np.float32)
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class PairShift(Topology):
@@ -338,6 +501,118 @@ class PairShift(Topology):
         ``fast_allreduce`` changes nothing."""
         return MixLowering(kind=NEIGHBOR_PERMUTE,
                            offsets=(0, self.shift % n_clients), weight=0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplicitSparse(Topology):
+    """A topology given directly as per-client neighbor lists — the native
+    citizen of the sparse path: it advertises the :data:`SEGMENT` kind, its
+    :meth:`sparse_lowering` is built straight from the lists (O(C·deg), no
+    dense detour), and :meth:`matrix` exists only for small-C diagnostics
+    (guarded by ``DENSIFY_MAX_CLIENTS``).
+
+    ``neighbors[i]`` are the clients whose models client ``i`` mixes;
+    ``weights[i]`` the matching row weights (default: uniform over the
+    listed neighbors). Rows are normalized to sum to 1 at lowering time, so
+    the represented matrix is always row-stochastic. Nested tuples keep the
+    dataclass hashable — it lives inside ``RoundSpec`` like every topology.
+
+    >>> import numpy as np
+    >>> t = ExplicitSparse(neighbors=((0, 1), (0, 1, 2), (1, 2)))
+    >>> t.lowering(3).kind
+    'segment'
+    >>> [float(v) for v in np.asarray(t.matrix(3))[1]]
+    [0.3333333432674408, 0.3333333432674408, 0.3333333432674408]
+    """
+    neighbors: Tuple[Tuple[int, ...], ...]
+    weights: Optional[Tuple[Tuple[float, ...], ...]] = None
+
+    def __post_init__(self):
+        if not self.neighbors:
+            raise ValueError("ExplicitSparse needs at least one client row")
+        c = len(self.neighbors)
+        for i, row in enumerate(self.neighbors):
+            if not row:
+                raise ValueError(f"client {i} has an empty neighbor list; "
+                                 "give it at least a self-edge (i,)")
+            for j in row:
+                if not 0 <= j < c:
+                    raise ValueError(
+                        f"client {i} lists neighbor {j} outside [0, {c})")
+        if self.weights is not None:
+            if len(self.weights) != c:
+                raise ValueError(
+                    f"weights has {len(self.weights)} rows, expected {c}")
+            for i, (row, wrow) in enumerate(zip(self.neighbors, self.weights)):
+                if len(wrow) != len(row):
+                    raise ValueError(
+                        f"client {i}: {len(wrow)} weights for "
+                        f"{len(row)} neighbors")
+                if any(w < 0 for w in wrow) or sum(wrow) <= 0:
+                    raise ValueError(
+                        f"client {i}: row weights must be nonnegative with "
+                        "a positive sum")
+
+    @classmethod
+    def from_lowering(cls, sparse: SparseLowering) -> "ExplicitSparse":
+        """Wrap a runtime :class:`SparseLowering` back into a hashable spec
+        (drops weight-0 padding edges)."""
+        neighbors, weights = [], []
+        for i in range(sparse.n_clients):
+            keep = np.flatnonzero(sparse.edge_w[i])
+            if keep.size == 0:      # all-zero row: keep a self-loop
+                neighbors.append((i,))
+                weights.append((1.0,))
+                continue
+            neighbors.append(tuple(int(j) for j in sparse.neighbor_idx[i, keep]))
+            weights.append(tuple(float(w) for w in sparse.edge_w[i, keep]))
+        return cls(neighbors=tuple(neighbors), weights=tuple(weights))
+
+    def sparse_lowering(self, n_clients: int) -> SparseLowering:
+        if n_clients != len(self.neighbors):
+            raise ValueError(
+                f"ExplicitSparse defines {len(self.neighbors)} clients but "
+                f"the spec asks for n_clients={n_clients}")
+        c = n_clients
+        d = max(len(row) for row in self.neighbors)
+        idx = np.tile(np.arange(c, dtype=np.int32)[:, None], (1, d))
+        ew = np.zeros((c, d), np.float32)
+        for i, row in enumerate(self.neighbors):
+            idx[i, :len(row)] = row
+            wrow = (np.ones(len(row), np.float32) if self.weights is None
+                    else np.asarray(self.weights[i], np.float32))
+            ew[i, :len(row)] = wrow / wrow.sum()
+        return SparseLowering(idx, ew)
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        """Dense form for small-C diagnostics only (spectral gaps,
+        equivalence tests) — raises past ``DENSIFY_MAX_CLIENTS``."""
+        return jnp.asarray(self.sparse_lowering(n_clients).to_dense())
+
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
+        """Always the :data:`SEGMENT` kind: the gather + ``segment_sum`` mix
+        is this topology's canonical execution; ``fast_allreduce`` changes
+        nothing (the sparse mix already moves O(C·deg) data)."""
+        return MixLowering(kind=SEGMENT)
+
+
+def ring_neighbors(n_clients: int, neighbors: int = 1
+                   ) -> Tuple[Tuple[int, ...], ...]:
+    """Neighbor lists of the :class:`Ring` window, for building an
+    :class:`ExplicitSparse` ring at populations where the dense ``Ring``
+    matrix would be unbuildable. Ascending client order per row (the dense
+    contraction order), distinct members only (wrap never double-counts).
+
+    >>> ring_neighbors(5, 1)[0]
+    (0, 1, 4)
+    """
+    if neighbors < 1:
+        raise ValueError("ring_neighbors needs neighbors >= 1")
+    span = range(-neighbors, neighbors + 1)
+    return tuple(
+        tuple(sorted({(i + off) % n_clients for off in span}))
+        for i in range(n_clients))
 
 
 # ---------------------------------------------------------------------------
@@ -527,6 +802,118 @@ class LinkQualitySchedule(Schedule):
         np.fill_diagonal(q, 1.0)
         w = (q / q.sum(axis=1, keepdims=True)).astype(np.float32)
         return jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Cohort sampling: active-cohort draws from a large enrolled population
+# ---------------------------------------------------------------------------
+
+# fold_in salt deriving the cohort-draw key from the engine's per-round
+# k_topo — a dedicated stream so a stochastic INTRA-cohort topology
+# (RandomGraph inside the cohort) can keep consuming k_topo itself without
+# correlating with the membership draw.
+_COHORT_SALT = 0x636F686F  # "coho"
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSchedule:
+    """Per-round active-cohort sampling from an enrolled population.
+
+    Each round, ``cohort_at(k_topo)`` draws ``cohort_size`` distinct clients
+    from the ``n_enrolled`` population — the client-scheduling regime of
+    arXiv:2406.00752 where only a resource-feasible cohort participates —
+    keyed off the engine's per-round ``k_topo`` stream, so
+    ``rounds.topology_keys(run_key, K)`` replays the exact membership of
+    every round of a run (the same replay contract stochastic topologies
+    already honor).
+
+    ``bias`` shapes the selection weights:
+
+      * ``uniform`` — every enrolled client equally likely;
+      * ``pareto``  — client ``i`` drawn ∝ ``(i + 1) ** -pareto_alpha``, the
+        heavy-tailed participation skew of availability-biased selection
+        (Pareto cohort selection per SNIPPETS.md Snippet 2): a head of
+        well-connected clients appears nearly every round, the tail rarely;
+      * ``prefix``  — deterministically the first ``cohort_size`` clients
+        (the :class:`PartialParticipation` association, useful for pinning
+        cohort-vs-masked equivalence).
+
+    Weighted sampling WITHOUT replacement is done by the Gumbel top-k trick
+    — ``top_k(log w + Gumbel noise)`` draws a distinct k-subset with the
+    successive-sampling distribution of ``w`` — which is jit-free,
+    shape-static, and O(C_enrolled) per round. The returned cohort is sorted
+    ascending so the cohort's intra-round client order (and with it every
+    fp32 association downstream) is a pure function of the membership set.
+
+    >>> import jax
+    >>> cs = CohortSchedule(n_enrolled=100, cohort_size=8)
+    >>> idx = cs.cohort_at(jax.random.key(0))
+    >>> int(idx.shape[0]), bool((idx[1:] > idx[:-1]).all())
+    (8, True)
+    >>> CohortSchedule(10, 3, bias="prefix").cohort_at(jax.random.key(1))
+    Array([0, 1, 2], dtype=int32)
+    """
+    n_enrolled: int
+    cohort_size: int
+    bias: str = "uniform"
+    pareto_alpha: float = 1.1
+
+    def __post_init__(self):
+        if self.n_enrolled < 1:
+            raise ValueError("CohortSchedule needs n_enrolled >= 1")
+        if not 1 <= self.cohort_size <= self.n_enrolled:
+            raise ValueError(
+                f"cohort_size={self.cohort_size} must lie in "
+                f"[1, n_enrolled={self.n_enrolled}]")
+        if self.bias not in ("uniform", "pareto", "prefix"):
+            raise ValueError(
+                f"unknown bias {self.bias!r} "
+                "(expected uniform | pareto | prefix)")
+        if self.bias == "pareto" and self.pareto_alpha <= 0:
+            raise ValueError("pareto bias needs pareto_alpha > 0")
+
+    @classmethod
+    def from_spec(cls, n_enrolled: int, cohort_size: int,
+                  bias_spec: str = "uniform") -> "CohortSchedule":
+        """CLI-friendly constructor: ``bias_spec`` is
+        ``uniform | pareto[:alpha] | prefix`` (``--cohort-bias``).
+
+        >>> CohortSchedule.from_spec(100, 8, "pareto:1.5").pareto_alpha
+        1.5
+        """
+        head, _, arg = bias_spec.strip().lower().partition(":")
+        if head == "pareto" and arg:
+            return cls(n_enrolled, cohort_size, bias="pareto",
+                       pareto_alpha=float(arg))
+        return cls(n_enrolled, cohort_size, bias=head)
+
+    def weights(self) -> np.ndarray:
+        """The normalized per-client selection weights (host-side) — what
+        the sampler statistics test checks observed frequencies against."""
+        if self.bias == "pareto":
+            w = (np.arange(self.n_enrolled, dtype=np.float64) + 1.0) \
+                ** -self.pareto_alpha
+        elif self.bias == "prefix":
+            w = np.zeros(self.n_enrolled, np.float64)
+            w[:self.cohort_size] = 1.0
+        else:
+            w = np.ones(self.n_enrolled, np.float64)
+        return w / w.sum()
+
+    def cohort_at(self, k_topo) -> jnp.ndarray:
+        """The round's active cohort: ``[cohort_size]`` distinct client ids
+        in ascending order, a pure function of the round's ``k_topo``."""
+        if self.bias == "prefix":
+            return jnp.arange(self.cohort_size, dtype=jnp.int32)
+        key = jax.random.fold_in(k_topo, _COHORT_SALT)
+        gumbel = jax.random.gumbel(key, (self.n_enrolled,), jnp.float32)
+        if self.bias == "pareto":
+            scores = gumbel - jnp.float32(self.pareto_alpha) * jnp.log1p(
+                jnp.arange(self.n_enrolled, dtype=jnp.float32))
+        else:
+            scores = gumbel
+        _, idx = jax.lax.top_k(scores, self.cohort_size)
+        return jnp.sort(idx.astype(jnp.int32))
 
 
 def from_name(name: str) -> Topology:

@@ -47,6 +47,82 @@ class FLDataSource:
         return self.client_data
 
 
+class CohortDataSource:
+    """Enrolled-population data for the cohort driver
+    (``core.rounds.run_blade_fl_cohort``).
+
+    ``FLDataSource`` materializes every client's local dataset up front —
+    O(C · samples) memory, fine at C = 20, unbuildable for a 10k enrolled
+    population. Here each client's fixed local dataset is a pure function
+    of ``(source key, client id)``: shared class templates (one draw, so
+    the population learns one task), per-client Dirichlet(alpha) label
+    proportions (the same non-IID skew the partitioned source has) and
+    per-client sample noise, all folded from the client id — built only
+    when a round's cohort actually contains the client, LRU-bounded. A K-
+    round run touches O(A · K) client datasets, never O(C_enrolled).
+
+    ``cohort_batch`` has the ``(round_idx, cohort_idx) -> [A, m, ...]``
+    signature ``run_blade_fl_cohort`` expects for its ``batches``
+    callable.
+    """
+
+    def __init__(self, key, samples_per_client: int,
+                 dirichlet_alpha: float = 0.5, dataset: str = "mnist",
+                 image_dim: int = 784, n_classes: int = 10,
+                 cache_size: int = 512):
+        if samples_per_client < 1:
+            raise ValueError("samples_per_client must be >= 1")
+        if cache_size < 1:
+            raise ValueError("cache_size must be >= 1")
+        noise, template_scale = ((1.3, 0.35) if dataset == "mnist"
+                                 else (4.0, 0.3))
+        k_tmpl, k_eval, self._client_key = jax.random.split(key, 3)
+        self.templates = (jax.random.normal(k_tmpl, (n_classes, image_dim))
+                          * template_scale).astype(jnp.float32)
+        self.samples_per_client = samples_per_client
+        self.dirichlet_alpha = dirichlet_alpha
+        self.n_classes = n_classes
+        self.noise = noise
+        self.eval_data = self._draw(k_eval, 2048, skew=False)
+        self._cache: Dict[int, Dict[str, jnp.ndarray]] = {}
+        self._cache_size = cache_size
+
+    def _draw(self, key, n: int, skew: bool = True) -> Dict[str, jnp.ndarray]:
+        k_prop, k_lbl, k_noise = jax.random.split(key, 3)
+        if skew:
+            # per-client Dirichlet label proportions = the non-IID skew
+            props = jax.random.dirichlet(
+                k_prop, jnp.full((self.n_classes,), self.dirichlet_alpha))
+            y = jax.random.categorical(k_lbl, jnp.log(props + 1e-9), shape=(n,))
+        else:
+            y = jax.random.randint(k_lbl, (n,), 0, self.n_classes)
+        x = self.templates[y] + jax.random.normal(
+            k_noise, (n, self.templates.shape[1])) * self.noise
+        return {"x": jax.nn.sigmoid(x).astype(jnp.float32),
+                "y": y.astype(jnp.int32)}
+
+    def client_batch(self, client_id: int) -> Dict[str, jnp.ndarray]:
+        """Client ``client_id``'s fixed local dataset ``[m, ...]`` —
+        deterministic in the id, cached while hot."""
+        cid = int(client_id)
+        hit = self._cache.get(cid)
+        if hit is not None:
+            return hit
+        batch = self._draw(jax.random.fold_in(self._client_key, cid),
+                           self.samples_per_client)
+        if len(self._cache) >= self._cache_size:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[cid] = batch
+        return batch
+
+    def cohort_batch(self, round_idx: int, cohort_idx) -> Dict[str, jnp.ndarray]:
+        """The ``[A, m, ...]`` stack for a round's cohort (full-batch GD:
+        round_idx is unused, each client always trains its fixed local
+        set)."""
+        rows = [self.client_batch(i) for i in np.asarray(cohort_idx)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
 class LMDataSource:
     """Synthetic token streams for the assigned-architecture train runs,
     stacked on a leading client axis."""

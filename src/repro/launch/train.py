@@ -29,10 +29,11 @@ import jax
 
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
 from repro.core import allocation, rounds, spectral, topology
-from repro.data.pipeline import FLDataSource, LMDataSource
+from repro.data.pipeline import CohortDataSource, FLDataSource, LMDataSource
 from repro.launch.mesh import make_client_mesh
 from repro.models import registry
 from repro.models.mlp import init_mlp, mlp_loss
+from repro.sharding import plans
 from repro.training.metrics import MetricLogger
 
 
@@ -92,6 +93,66 @@ def run_mlp(args) -> dict:
         "fast_allreduce": spec.fast_allreduce,
         "dispatch": dict(rounds.LAST_DISPATCH),
         "wall_s": time.time() - t0,
+        **spectral_fields(spec, run_key, blade.K),
+    }
+    print(json.dumps(result, indent=1))
+    return result
+
+
+def run_cohort(args) -> dict:
+    """Cohort-sampled population run: ``--enrolled`` clients of which a
+    cohort of ``--cohort`` participates per round (``--cohort-bias``
+    selects the sampling weights). The round engine runs at cohort size —
+    devices never see an array shaped by the enrolled count, which is what
+    makes ``--enrolled 10000`` runnable on one CPU."""
+    blade = BladeConfig(n_clients=args.cohort, n_lazy=args.lazy,
+                        sigma2=args.sigma2, t_sum=args.t_sum,
+                        alpha=args.alpha, beta=args.beta, eta=args.eta,
+                        K=args.k, dp_sigma=args.dp_sigma, seed=args.seed)
+    tau = allocation.tau_from_budget(blade.t_sum, blade.K, blade.alpha, blade.beta)
+    cohort = topology.CohortSchedule.from_spec(
+        args.enrolled, args.cohort, args.cohort_bias)
+    spec = rounds.RoundSpec(
+        n_clients=args.cohort, tau=max(tau, 1), eta=blade.eta,
+        n_lazy=blade.n_lazy, sigma2=blade.sigma2, dp_sigma=blade.dp_sigma,
+        mine_attempts=allocation.mining_iterations(blade.beta),
+        difficulty_bits=4, eval_every=args.eval_every,
+        topology=topology.from_name(args.topology),
+        fast_allreduce=args.fast_allreduce, use_kernel=args.kernels,
+        fused_mix=args.fused_mix)
+    key = jax.random.key(blade.seed)
+    src = CohortDataSource(key, blade.samples_per_client,
+                           blade.dirichlet_alpha)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    mesh = make_client_mesh(args.devices) if args.devices else None
+    plan = (plans.cohort_carry_plan(mesh, args.enrolled, args.cohort)
+            if mesh is not None else None)
+    log = MetricLogger(args.out_dir, "blade_cohort")
+    run_key = jax.random.fold_in(key, 2)
+    t0 = time.time()
+    store, hist, ledger = rounds.run_blade_fl_cohort(
+        mlp_loss, spec, params, src.cohort_batch, run_key, blade.K, cohort,
+        mesh=mesh, plan=plan)
+    # final eval: aggregate the LAST round's cohort (the freshest models)
+    from repro.core.aggregation import aggregate_once
+    final = aggregate_once(store.gather(hist[-1]["cohort"]))
+    loss, metrics = mlp_loss(final, src.eval_data)
+    for i, h in enumerate(hist):
+        log.log(i, **{k: v for k, v in h.items() if k != "cohort"})
+    result = {
+        "enrolled": args.enrolled, "cohort": args.cohort,
+        "cohort_bias": args.cohort_bias, "K": blade.K, "tau": spec.tau,
+        "touched": store.touched,
+        "store_mb": round(store.materialized_bytes() / 1e6, 3),
+        "final_eval_loss": float(loss),
+        "final_eval_acc": float(metrics["accuracy"]),
+        "final_global_loss": hist[-1].get("global_loss"),
+        "chain_valid": ledger.validate_chain(), "blocks": len(ledger.blocks),
+        "devices": mesh.devices.size if mesh is not None else 1,
+        "dispatch": dict(rounds.LAST_DISPATCH),
+        "wall_s": time.time() - t0,
+        # intra-cohort mixing diagnostics at size A (the enrolled graph is
+        # never materialized — that is the point)
         **spectral_fields(spec, run_key, blade.K),
     }
     print(json.dumps(result, indent=1))
@@ -162,6 +223,17 @@ def main():
                     help="time-varying topology schedule (overrides "
                          "--topology): rotate[:step] | alt[:k[:m]] | "
                          "snr[:period] (core/topology.py Schedules)")
+    ap.add_argument("--enrolled", type=int, default=0,
+                    help="cohort mode (mlp arch): total enrolled clients; a "
+                         "cohort of --cohort participates per round. Devices "
+                         "scale with the cohort, not this count — tens of "
+                         "thousands run on one CPU (core/rounds.py "
+                         "run_blade_fl_cohort)")
+    ap.add_argument("--cohort", type=int, default=64,
+                    help="active cohort size A per round (with --enrolled)")
+    ap.add_argument("--cohort-bias", default="uniform",
+                    help="cohort sampling weights: uniform | pareto[:alpha] "
+                         "| prefix (core/topology.py CohortSchedule)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="global-loss eval stride (NaN on skipped rounds)")
     ap.add_argument("--fast-allreduce", action="store_true",
@@ -190,7 +262,11 @@ def main():
     args = ap.parse_args()
     if args.schedule:
         args.topology = args.schedule
-    if args.arch == "mlp":
+    if args.enrolled > 0:
+        if args.arch != "mlp":
+            ap.error("--enrolled cohort mode runs the mlp substrate")
+        run_cohort(args)
+    elif args.arch == "mlp":
         run_mlp(args)
     else:
         run_arch_smoke(args)

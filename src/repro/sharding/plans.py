@@ -102,6 +102,73 @@ def scan_carry_plan(mesh: Mesh, n_clients: int,
                          n_shards=n_shards)
 
 
+@dataclasses.dataclass(frozen=True)
+class CohortCarryPlan:
+    """Carry layout for the cohort-sampled driver
+    (``core.rounds.run_blade_fl_cohort``).
+
+    Only the ``[A, ...]`` ACTIVE-cohort stack has a device layout — split
+    along ``client_axes`` like the scan carry, protocol scalars replicated.
+    The enrolled population (``n_enrolled``) deliberately has NO spec here:
+    it lives in the host-side ``PopulationStore`` and crosses the host
+    boundary one cohort per round, which is the whole memory story —
+    devices scale with A, the host with touched clients, and nothing
+    scales with C_enrolled² .
+
+    Frozen + hashable: part of the cohort runner's cache key.
+    """
+    n_enrolled: int
+    cohort_size: int
+    client_axes: Tuple[str, ...] = ("data",)
+    n_shards: int = 1
+
+    @property
+    def clients_per_shard(self) -> int:
+        return self.cohort_size // self.n_shards
+
+    def client_spec(self) -> P:
+        """Spec prefix for cohort-stacked leaves ([A, ...] -> axis 0)."""
+        return P(self.client_axes)
+
+    def batch_spec(self, stacked: bool) -> P:
+        """Cohort batches are ``[A, ...]`` (the driver feeds one round at a
+        time, so there is no stacked [K, A, ...] form)."""
+        return P(None, self.client_axes) if stacked else P(self.client_axes)
+
+
+def cohort_carry_plan(mesh: Mesh, n_enrolled: int, cohort_size: int,
+                      client_axes: Tuple[str, ...] = ("data",)
+                      ) -> CohortCarryPlan:
+    """Build + validate the cohort-carry layout for ``mesh``.
+
+    Only ``cohort_size`` must divide over the client-axis extent — the
+    enrolled population is host-side and never sharded, so ``n_enrolled``
+    is unconstrained (and may be far larger than any device array could
+    be)."""
+    from repro.sharding.specs import _extent
+
+    if not client_axes:
+        raise ValueError(
+            "client_axes must name at least one mesh axis (an empty tuple "
+            "would replicate the cohort and silently run every client on "
+            "every shard)")
+    for a in client_axes:
+        if a not in mesh.shape:
+            raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")
+    if not 1 <= cohort_size <= n_enrolled:
+        raise ValueError(
+            f"cohort_size={cohort_size} must lie in "
+            f"[1, n_enrolled={n_enrolled}]")
+    n_shards = _extent(mesh, tuple(client_axes))
+    if cohort_size % n_shards != 0:
+        raise ValueError(
+            f"cohort_size={cohort_size} not divisible by the client-axis "
+            f"extent {n_shards} (mesh axes {client_axes}); pick A as a "
+            "multiple of the device count")
+    return CohortCarryPlan(n_enrolled=n_enrolled, cohort_size=cohort_size,
+                           client_axes=tuple(client_axes), n_shards=n_shards)
+
+
 def data_axes(multi_pod: bool) -> Tuple[str, ...]:
     return ("pod", "data") if multi_pod else ("data",)
 

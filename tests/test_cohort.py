@@ -1,0 +1,399 @@
+"""The cohort-sampled population path: ``topology.CohortSchedule``,
+``rounds.PopulationStore`` and ``rounds.run_blade_fl_cohort``.
+
+The contracts pinned here:
+
+  * **sampler statistics** — uniform draws hit every enrolled client at the
+    uniform rate (chi-square-style bound over a deterministic key stream);
+    Pareto weights skew participation toward the head exactly as the
+    ``weights()`` ordering says; ``prefix`` is literally ``arange(A)``.
+  * **replayability** — cohort membership is a pure function of the
+    engine's per-round ``k_topo`` stream: ``rounds.topology_keys`` replays
+    a run's recorded cohorts exactly, and a shifted key stream (the
+    negative control) does not.
+  * **degenerate-cohort regression** — with A = C_enrolled the cohort
+    driver IS the plain driver: params, history metrics and the ledger
+    chain agree bitwise with ``run_blade_fl``.
+  * **PartialParticipation reroute** — the sparse segment mix vs the old
+    masked-dense mix on the same PartialParticipation spec: tolerance-tier
+    params, round-1 digest bitwise (the digest is pre-mix), chains fork
+    deterministically after — pinned exactly like the fast_allreduce fork.
+  * **store laziness** — host memory scales with TOUCHED clients, never
+    with C_enrolled; gather/scatter validate their indices.
+  * **sharded carry** — the 4-device cohort run is bitwise the
+    single-device one (skips without devices; the CI cohort lane and the
+    slow subprocess case supply them).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import chain, rounds, topology
+from repro.models.mlp import init_mlp, mlp_loss
+from repro.sharding import plans
+
+from equivalence import assert_trees_close
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs 4 host devices (CI cohort lane sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _mesh4():
+    return Mesh(np.array(jax.devices()[:4]), ("data",))
+
+
+def _tiny_params(key):
+    return init_mlp(key, in_dim=12, hidden=6)
+
+
+def _batch_fn(key, m=5):
+    def fn(round_idx, cohort_idx):
+        ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.asarray(cohort_idx, jnp.int32))
+        x = jax.vmap(lambda k: jax.random.normal(k, (m, 12)))(ks)
+        y = jax.vmap(lambda k: jax.random.randint(k, (m,), 0, 10))(ks)
+        return {"x": x, "y": y.astype(jnp.int32)}
+    return fn
+
+
+def _spec(a, **kw):
+    kw.setdefault("topology", topology.FullMesh())
+    return rounds.RoundSpec(n_clients=a, tau=2, eta=0.1, mine_attempts=16,
+                            difficulty_bits=1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# CohortSchedule: validation + sampling statistics
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_schedule_validation():
+    with pytest.raises(ValueError):
+        topology.CohortSchedule(n_enrolled=4, cohort_size=5)
+    with pytest.raises(ValueError):
+        topology.CohortSchedule(n_enrolled=4, cohort_size=0)
+    with pytest.raises(ValueError):
+        topology.CohortSchedule(n_enrolled=4, cohort_size=2, bias="bogus")
+    with pytest.raises(ValueError):
+        topology.CohortSchedule(n_enrolled=4, cohort_size=2, bias="pareto",
+                                pareto_alpha=0.0)
+
+
+def test_from_spec_parses_bias_strings():
+    cs = topology.CohortSchedule.from_spec(100, 8, "pareto:2.5")
+    assert cs.bias == "pareto" and cs.pareto_alpha == 2.5
+    assert topology.CohortSchedule.from_spec(100, 8, "uniform").bias == \
+        "uniform"
+    assert topology.CohortSchedule.from_spec(100, 8, "prefix").bias == \
+        "prefix"
+    with pytest.raises(ValueError):
+        topology.CohortSchedule.from_spec(100, 8, "zipf")
+    with pytest.raises(ValueError):
+        topology.CohortSchedule.from_spec(100, 8, "pareto:nope")
+
+
+def test_weights_shapes_and_ordering():
+    uni = topology.CohortSchedule(n_enrolled=10, cohort_size=3).weights()
+    np.testing.assert_allclose(uni, np.full(10, 0.1), rtol=1e-12)
+    par = topology.CohortSchedule(n_enrolled=10, cohort_size=3,
+                                  bias="pareto", pareto_alpha=1.5).weights()
+    assert par.shape == (10,) and abs(par.sum() - 1.0) < 1e-12
+    assert np.all(np.diff(par) < 0)           # strictly head-heavy
+    pre = topology.CohortSchedule(n_enrolled=10, cohort_size=3,
+                                  bias="prefix").weights()
+    assert pre[:3].sum() == pytest.approx(1.0) and np.all(pre[3:] == 0)
+
+
+def test_cohort_at_is_sorted_unique_in_range():
+    cs = topology.CohortSchedule(n_enrolled=50, cohort_size=7)
+    for k in rounds.topology_keys(jax.random.key(0), 5):
+        idx = np.asarray(cs.cohort_at(k))
+        assert idx.shape == (7,) and idx.dtype == np.int32
+        assert np.all(np.diff(idx) > 0)        # sorted, distinct
+        assert idx.min() >= 0 and idx.max() < 50
+
+
+def test_prefix_cohort_is_arange():
+    cs = topology.CohortSchedule(n_enrolled=50, cohort_size=7, bias="prefix")
+    for k in rounds.topology_keys(jax.random.key(0), 3):
+        np.testing.assert_array_equal(np.asarray(cs.cohort_at(k)),
+                                      np.arange(7))
+
+
+def test_uniform_sampling_frequencies_chi_square():
+    """Over many keyed draws every enrolled client participates at the
+    uniform rate: chi-square statistic over the per-client counts stays
+    under the 99.9th percentile of chi2(C-1). Deterministic keys, so this
+    never flakes."""
+    c, a, n_draws = 10, 3, 3000
+    cs = topology.CohortSchedule(n_enrolled=c, cohort_size=a)
+    keys = jnp.stack(rounds.topology_keys(jax.random.key(7), n_draws))
+    idx = np.asarray(jax.vmap(cs.cohort_at)(keys))
+    counts = np.bincount(idx.ravel(), minlength=c)
+    assert counts.sum() == n_draws * a
+    expected = n_draws * a / c
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 27.9, f"chi2={chi2}, counts={counts}"   # chi2(9) @ .999
+
+
+def test_pareto_sampling_is_head_heavy():
+    c, a, n_draws = 20, 4, 1500
+    cs = topology.CohortSchedule(n_enrolled=c, cohort_size=a,
+                                 bias="pareto", pareto_alpha=1.5)
+    keys = jnp.stack(rounds.topology_keys(jax.random.key(3), n_draws))
+    counts = np.bincount(
+        np.asarray(jax.vmap(cs.cohort_at)(keys)).ravel(), minlength=c)
+    # participation decreases over quartiles of the id range, and the head
+    # dominates the tail outright
+    quartiles = counts.reshape(4, 5).sum(1)
+    assert np.all(np.diff(quartiles) < 0), quartiles
+    assert counts[0] > 3 * counts[-1]
+
+
+def test_uniform_draws_differ_across_rounds():
+    cs = topology.CohortSchedule(n_enrolled=200, cohort_size=5)
+    keys = rounds.topology_keys(jax.random.key(0), 6)
+    draws = [tuple(np.asarray(cs.cohort_at(k))) for k in keys]
+    assert len(set(draws)) > 1
+
+
+# ---------------------------------------------------------------------------
+# PopulationStore
+# ---------------------------------------------------------------------------
+
+
+def test_population_store_is_lazy():
+    params = _tiny_params(jax.random.key(0))
+    store = rounds.PopulationStore(params, 10_000)
+    assert store.touched == 0
+    base = store.materialized_bytes()          # just the shared init model
+    got = store.gather(np.array([3, 9_999]))
+    for leaf, init in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(leaf[0]), np.asarray(init))
+        np.testing.assert_array_equal(np.asarray(leaf[1]), np.asarray(init))
+    assert store.touched == 0                  # gather alone touches nothing
+    store.scatter(np.array([3, 9_999]), got)
+    assert store.touched == 2
+    assert store.materialized_bytes() > base
+
+
+def test_population_store_scatter_round_trips():
+    params = _tiny_params(jax.random.key(1))
+    store = rounds.PopulationStore(params, 100)
+    cohort = jax.tree.map(
+        lambda x: jnp.stack([x + 1.0, x + 2.0, x + 3.0]), params)
+    store.scatter(np.array([5, 50, 99]), cohort)
+    back = store.gather(np.array([50, 99, 5]))
+    want = jax.tree.map(
+        lambda x: jnp.stack([x + 2.0, x + 3.0, x + 1.0]), params)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_population_store_validates_indices():
+    params = _tiny_params(jax.random.key(0))
+    with pytest.raises(ValueError):
+        rounds.PopulationStore(params, 0)
+    store = rounds.PopulationStore(params, 10)
+    with pytest.raises(ValueError):
+        store.gather(np.array([0, 10]))        # out of range
+    with pytest.raises(ValueError):
+        store.gather(np.array([-1]))
+    cohort = jax.tree.map(lambda x: jnp.stack([x, x]), params)
+    with pytest.raises(ValueError):
+        store.scatter(np.array([0, 1, 2]), cohort)   # leading-dim mismatch
+
+
+# ---------------------------------------------------------------------------
+# The cohort driver
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_driver_validates_sizes():
+    params = _tiny_params(jax.random.key(0))
+    cs = topology.CohortSchedule(n_enrolled=20, cohort_size=4)
+    with pytest.raises(ValueError, match="cohort_size"):
+        rounds.run_blade_fl_cohort(mlp_loss, _spec(5), params,
+                                   _batch_fn(jax.random.key(3)),
+                                   jax.random.key(2), 2, cs)
+    wrong_store = rounds.PopulationStore(params, 30)
+    with pytest.raises(ValueError, match="n_enrolled"):
+        rounds.run_blade_fl_cohort(mlp_loss, _spec(4), params,
+                                   _batch_fn(jax.random.key(3)),
+                                   jax.random.key(2), 2, cs,
+                                   store=wrong_store)
+
+
+def test_cohort_replay_from_topology_keys():
+    """The recorded per-round cohorts are a pure function of the run key's
+    topology stream — and of nothing else. Shifted keys (the negative
+    control) produce different memberships."""
+    params = _tiny_params(jax.random.key(0))
+    run_key = jax.random.key(2)
+    cs = topology.CohortSchedule(n_enrolled=60, cohort_size=4)
+    _, hist, _ = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(4), params, _batch_fn(jax.random.key(3)),
+        run_key, 4, cs)
+    keys = rounds.topology_keys(run_key, 4)
+    replayed = [[int(i) for i in np.asarray(cs.cohort_at(k))] for k in keys]
+    assert replayed == [h["cohort"] for h in hist]
+    shifted = [[int(i) for i in np.asarray(cs.cohort_at(
+        jax.random.fold_in(k, 1)))] for k in keys]
+    assert shifted != [h["cohort"] for h in hist]
+
+
+def test_degenerate_cohort_equals_plain_driver_bitwise():
+    """A = C_enrolled: every client participates every round, so the cohort
+    driver must BE run_blade_fl — params, metrics and the hash-linked chain
+    agree bitwise (the host key mirror reproduces the device split chain
+    exactly)."""
+    c, k = 6, 4
+    key = jax.random.key(0)
+    params = _tiny_params(jax.random.fold_in(key, 1))
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 3), (c, 40, 12)),
+             "y": jax.random.randint(jax.random.fold_in(key, 4),
+                                     (c, 40), 0, 10)}
+    run_key = jax.random.fold_in(key, 2)
+    st, hist_d, led_d = rounds.run_blade_fl(
+        mlp_loss, _spec(c), params, batch, run_key, k)
+    cs = topology.CohortSchedule(n_enrolled=c, cohort_size=c)
+    store, hist_c, led_c = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(c), params, batch, run_key, k, cs)
+    final = store.gather(np.arange(c))
+    for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(st.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [b_.header_hash for b_ in led_c.blocks] == \
+           [b_.header_hash for b_ in led_d.blocks]
+    for hc, hd in zip(hist_c, hist_d):
+        assert hc["cohort"] == list(range(c))
+        for k2, v in hd.items():
+            assert hc[k2] == v, k2
+
+
+def test_cohort_run_touches_only_participants():
+    params = _tiny_params(jax.random.key(0))
+    cs = topology.CohortSchedule(n_enrolled=10_000, cohort_size=4)
+    store, hist, ledger = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(4), params, _batch_fn(jax.random.key(3)),
+        jax.random.key(2), 3, cs)
+    active = {i for h in hist for i in h["cohort"]}
+    assert store.touched == len(active) <= 12
+    assert ledger.validate_chain() and len(ledger.blocks) == 3
+    # the scatter really lands: participants moved off the init model
+    init = jax.tree.leaves(params)
+    some = store.gather(np.array(sorted(active)[:2]))
+    moved = any(not np.array_equal(np.asarray(leaf[0]), np.asarray(i0))
+                for leaf, i0 in zip(jax.tree.leaves(some), init))
+    assert moved
+
+
+def test_partial_participation_sparse_vs_masked_dense():
+    """The reroute regression (pinned like the fast_allreduce fork): the
+    SAME PartialParticipation spec mixed through mix_segment
+    (sparse_mix=True) vs the masked dense matmul (sparse_mix=False).
+    Tolerance-tier params/metrics; the round-1 digest is BITWISE (digests
+    hash the pre-mix broadcast set); both chains stay valid and the sparse
+    chain reproduces itself deterministically."""
+    c, k = 16, 3
+    key = jax.random.key(5)
+    params = _tiny_params(jax.random.fold_in(key, 1))
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 3), (c, 8, 12)),
+             "y": jax.random.randint(jax.random.fold_in(key, 4),
+                                     (c, 8), 0, 10)}
+    run_key = jax.random.fold_in(key, 2)
+    outs = {}
+    for sparse in (True, False):
+        spec = _spec(c, sparse_mix=sparse,
+                     topology=topology.PartialParticipation(n_active=4))
+        outs[sparse] = rounds.run_blade_fl(
+            mlp_loss, spec, params, batch, run_key, k)
+    st_s, hist_s, led_s = outs[True]
+    st_d, hist_d, led_d = outs[False]
+    assert_trees_close(st_s.params, st_d.params, rtol=1e-5, atol=1e-6)
+    assert led_s.blocks[0].model_digest == led_d.blocks[0].model_digest
+    assert led_s.validate_chain() and led_d.validate_chain()
+    for hs, hd in zip(hist_s, hist_d):
+        assert hs["local_loss_mean"] == pytest.approx(
+            hd["local_loss_mean"], rel=1e-5)
+    _, _, led_s2 = rounds.run_blade_fl(
+        mlp_loss, _spec(c, sparse_mix=True,
+                        topology=topology.PartialParticipation(n_active=4)),
+        params, batch, run_key, k)
+    assert [b.header_hash for b in led_s.blocks] == \
+           [b.header_hash for b in led_s2.blocks]
+
+
+def test_cohort_carry_plan_validation(fake_mesh):
+    mesh = fake_mesh((4,), ("data",))
+    plan = plans.cohort_carry_plan(mesh, 1000, 8)
+    assert plan.clients_per_shard == 2
+    with pytest.raises(ValueError):
+        plans.cohort_carry_plan(mesh, 1000, 6)      # 6 % 4 != 0
+    with pytest.raises(ValueError):
+        plans.cohort_carry_plan(mesh, 4, 8)         # A > C_enrolled
+    with pytest.raises(ValueError):
+        plans.cohort_carry_plan(mesh, 1000, 8, client_axes=("model",))
+    with pytest.raises(ValueError):
+        plans.cohort_carry_plan(mesh, 1000, 8, client_axes=())
+
+
+@needs4
+def test_sharded_cohort_bitwise_vs_single_device():
+    """The 4-device cohort carry (cohort sharded over the mesh, population
+    host-side) reproduces the single-device run bit-for-bit: cohorts,
+    ledger chain, history metrics, and every touched store row."""
+    a, enrolled, k = 8, 50, 3
+    key = jax.random.key(0)
+    params = _tiny_params(jax.random.fold_in(key, 1))
+    run_key = jax.random.fold_in(key, 2)
+    cs = topology.CohortSchedule(n_enrolled=enrolled, cohort_size=a)
+    batch_fn = _batch_fn(jax.random.fold_in(key, 3))
+    st1, hist1, led1 = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(a), params, batch_fn, run_key, k, cs)
+    st4, hist4, led4 = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(a), params, batch_fn, run_key, k, cs,
+        mesh=_mesh4())
+    assert [h["cohort"] for h in hist1] == [h["cohort"] for h in hist4]
+    assert [b.header_hash for b in led1.blocks] == \
+           [b.header_hash for b in led4.blocks]
+    touched = sorted({i for h in hist1 for i in h["cohort"]})
+    r1, r4 = st1.gather(np.array(touched)), st4.gather(np.array(touched))
+    for x, y in zip(jax.tree.leaves(r1), jax.tree.leaves(r4)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for h1, h4 in zip(hist1, hist4):
+        assert h1 == h4
+
+
+@pytest.mark.slow
+def test_cohort_suite_on_4_devices_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-k", "sharded",
+         os.path.abspath(__file__)],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-2000:]
+
+
+def test_genesis_linkage_matches_chain_module():
+    """The cohort driver's host-mirrored prev_hash starts at the same
+    genesis constant the ledger validates against."""
+    params = _tiny_params(jax.random.key(0))
+    cs = topology.CohortSchedule(n_enrolled=12, cohort_size=4)
+    _, _, ledger = rounds.run_blade_fl_cohort(
+        mlp_loss, _spec(4), params, _batch_fn(jax.random.key(3)),
+        jax.random.key(2), 1, cs)
+    assert ledger.blocks[0].prev_hash == chain.GENESIS_HASH
+    assert ledger.validate_chain()

@@ -184,3 +184,43 @@ def test_gap_orders_observed_consensus():
     # like the mesh); the ring never does — and the observed spread follows
     assert gaps["mesh"] >= gaps["rotate"] > gaps["ring"]
     assert spreads["mesh"] < spreads["rotate"] < spreads["ring"]
+
+
+# ---------------------------------------------------------------------------
+# Sparse lowerings through the diagnostics (densified under the small-C guard)
+# ---------------------------------------------------------------------------
+
+
+def test_lambda2_accepts_sparse_lowering():
+    ring = topology.Ring(neighbors=1)
+    sp = ring.sparse_lowering(9)
+    assert spectral.lambda2_modulus(sp) == pytest.approx(
+        spectral.lambda2_modulus(np.asarray(ring.matrix(9))), abs=1e-9)
+
+
+def test_round_matrices_accepts_raw_sparse_lowering():
+    sp = topology.Ring(neighbors=2).sparse_lowering(8)
+    ws = spectral.round_matrices(sp, 8, 3)
+    assert len(ws) == 3
+    np.testing.assert_allclose(ws[0], np.asarray(
+        topology.Ring(neighbors=2).matrix(8)), atol=1e-7)
+    with pytest.raises(ValueError, match="n_clients"):
+        spectral.round_matrices(sp, 12, 3)
+
+
+def test_gap_report_on_explicit_sparse_topology():
+    topo = topology.ExplicitSparse(neighbors=topology.ring_neighbors(8, 1))
+    rep = spectral.gap_report(topo, 8, 3)
+    want = spectral.gap_report(topology.Ring(neighbors=1), 8, 3)
+    assert rep["ergodic_gap"] == pytest.approx(want["ergodic_gap"], abs=1e-7)
+
+
+def test_spectral_densify_guard_refuses_population_scale():
+    c = topology.DENSIFY_MAX_CLIENTS + 1
+    sp = topology.SparseLowering(
+        np.arange(c, dtype=np.int32)[:, None],
+        np.ones((c, 1), np.float32))
+    with pytest.raises(ValueError, match="refusing to densify"):
+        spectral.lambda2_modulus(sp)
+    with pytest.raises(ValueError, match="refusing to densify"):
+        spectral.round_matrices(sp, c, 2)
