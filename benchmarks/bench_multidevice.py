@@ -30,6 +30,11 @@ the fast path is buying, even on host "devices" where wall-clock barely
 moves (threads share one memory system; the ratio is what transfers to a
 real ICI mesh).
 
+This bench sweeps FLAT single-axis meshes; ``bench_hierarchy`` runs the
+same engine on a 2-D ``('pod', 'data')`` mesh and prices the two-level
+cluster lowering (in-pod aggregation + cross-pod halo) against the flat
+gather measured here.
+
 Read CPU numbers as the COST CURVE of the sharded lowering, not a speedup
 claim: host "devices" are threads carved out of the same CPU, so the
 per-client math gets no new FLOPs and the all-gathers/ppermutes are pure

@@ -261,6 +261,21 @@ def mix_rolls(params, offsets: Sequence[int], weight: float):
     return jax.tree.map(one, params)
 
 
+def _linear_axis(axis_name: AxisName):
+    """``(ppermute target, total extent)`` for a possibly-compound client
+    axis: the shard index linearizes row-major over the axis tuple
+    (``idx = idx * extent + axis_index`` per name — the same order
+    :func:`client_shard_index` computes and ``all_gather(..., tiled=True)``
+    concatenates), so a multi-axis ``('pod', 'data')`` mesh permutes like a
+    single flat axis of ``n_pod * n_data`` devices. Extents fold to concrete
+    Python ints under ``shard_map``, so the permute lists stay static."""
+    names = _axis_tuple(axis_name)
+    n_dev = 1
+    for nm in names:
+        n_dev *= jax.lax.psum(1, nm)
+    return (names[0] if len(names) == 1 else names), n_dev
+
+
 def mix_neighbor_halo(params, offsets: Sequence[int], weight: float,
                       axis_name: AxisName):
     """Ring lowering on the mesh: neighbor ``collective_permute``s.
@@ -271,13 +286,13 @@ def mix_neighbor_halo(params, offsets: Sequence[int], weight: float,
     O(window), independent of C, versus the all-gather fallback's O(C).
     Accumulation order and fp32 math match :func:`mix_rolls` exactly, so
     dense and sharded Ring mixes are bitwise identical. Requires
-    ``max(|off|) <= C/D`` (one-block halo) and a single mesh axis — the
-    engine falls back to the gathered :func:`mix_rolls` otherwise.
+    ``max(|off|) <= C/D`` (one-block halo). A compound client axis
+    (``('pod', 'data')``) is linearized row-major (:func:`_linear_axis`) —
+    the ring's cross-pod wrap is just one more permute edge, no gather.
     """
     if axis_name is None:
         return mix_rolls(params, offsets, weight)
-    (name,) = _axis_tuple(axis_name)
-    n_dev = jax.lax.psum(1, name)
+    name, n_dev = _linear_axis(axis_name)
     fwd = [((j + 1) % n_dev, j) for j in range(n_dev)]   # nxt[j] = block j+1
     bwd = [((j - 1) % n_dev, j) for j in range(n_dev)]   # prv[j] = block j-1
     w = jnp.float32(weight)
@@ -314,13 +329,14 @@ def mix_shift_halo(params, offsets: Sequence[int], weight: float,
 
     Bitwise contract: pure data movement plus the same fixed-order
     raw-sum-then-scale accumulation as :func:`mix_rolls`, so the sharded
-    result equals the dense roll form bit for bit. Requires a single mesh
-    axis; with ``axis_name=None`` it IS :func:`mix_rolls`.
+    result equals the dense roll form bit for bit. A compound client axis
+    is linearized row-major (:func:`_linear_axis`) — shifts that cross pod
+    boundaries or wrap the whole population stay two whole-block permutes;
+    with ``axis_name=None`` it IS :func:`mix_rolls`.
     """
     if axis_name is None:
         return mix_rolls(params, offsets, weight)
-    (name,) = _axis_tuple(axis_name)
-    n_dev = jax.lax.psum(1, name)
+    name, n_dev = _linear_axis(axis_name)
     w = jnp.float32(weight)
 
     def block_from(x, q):
@@ -459,6 +475,107 @@ def mix_segment(params, neighbor_idx, edge_w, *, axis_name: AxisName = None,
         return mixed.reshape(p_leaf.shape).astype(p_leaf.dtype)
 
     return jax.tree.map(one, params, source)
+
+
+def mix_cluster(params, n_clusters: int, inter_weight: float,
+                axis_name: AxisName = None, *, n_shards: int = 1,
+                full=None):
+    """Two-level ``ClusterTopology`` mix: intra-cluster mean + ring-coupled
+    cluster means (``W = B ⊗ J_S/S``; see ``topology.ClusterTopology``).
+
+    Dense (``axis_name=None``): reshape ``[C, ...]`` to ``[G, S, ...]``,
+    reduce each cluster to its mean (raw-sum-then-scale, FMA safety), roll
+    the means one step each way, and recombine ``[w_self, w_nbr, w_nbr]``
+    against the stacked ``[self, prev, next]`` terms as ONE ``dot_general``.
+    The dot is the load-bearing choice: scaled adds get FMA-contracted
+    differently per fusion context (``optimization_barrier`` does NOT block
+    contraction) and the bits fork between the dense and sharded programs,
+    while a dot has a single deterministic lowering everywhere — the same
+    reason ``mix_gather``/``mix_psum_dense`` combine via matmul. Every
+    client in a cluster broadcasts the same mixed mean, so the result is
+    exactly rank-G.
+
+    Cluster-aligned sharded path — a two-axis client mesh whose FIRST axis
+    extent equals ``n_clusters`` (the ``('pod', 'data')`` layout
+    ``sharding.plans.scan_carry_plan`` produces): the cluster sum is an
+    in-pod ``all_gather`` over the second axis (``S`` rows, never leaves the
+    pod) reduced with the same ``[1, S, ...]`` sum structure as the dense
+    ``[G, S, ...]`` reduce, and the roll becomes TWO model-sized cross-pod
+    ``ppermute``s of the cluster mean — O(S + 2) models moved versus the
+    flat gather's O(C), and still bitwise (same sums, same combine order;
+    no psum anywhere).
+
+    Any other layout (single axis, pod extent != G) falls back to the
+    gathered dense math + local-rows slice — bitwise by construction, the
+    alignment only buys communication volume.
+
+    >>> import jax.numpy as jnp
+    >>> p = {"w": jnp.arange(4.0).reshape(4, 1)}
+    >>> out = mix_cluster(p, n_clusters=2, inter_weight=0.5)
+    >>> [float(v) for v in out["w"].ravel()]
+    [1.5, 1.5, 1.5, 1.5]
+    >>> out = mix_cluster(p, n_clusters=2, inter_weight=0.0)
+    >>> [float(v) for v in out["w"].ravel()]
+    [0.5, 0.5, 2.5, 2.5]
+    """
+    g = int(n_clusters)
+    w_row = jnp.array([1.0 - inter_weight, inter_weight / 2.0,
+                       inter_weight / 2.0], jnp.float32)
+
+    def combine(m, prv, nxt):
+        # one dot_general, never scaled adds: see the docstring's FMA note
+        return jnp.tensordot(w_row, jnp.stack([m, prv, nxt], axis=0), axes=1)
+
+    def dense(tree):
+        def one(leaf):
+            x = leaf.astype(jnp.float32)
+            s = x.shape[0] // g
+            grp = x.reshape((g, s) + x.shape[1:])
+            # one [1, S, ...] reduce PER CLUSTER — the exact operand shape
+            # the aligned sharded path reduces, because XLA associates a
+            # reduce differently for [G, S, ...] vs [1, S, ...] operands on
+            # some leaf ranks and that forks the bits. The barrier pins the
+            # scaled mean so the combine multiplies see the same value in
+            # every fusion context.
+            m = jnp.concatenate([
+                grp[i:i + 1].sum(axis=1) for i in range(g)])  # [G, ...]
+            m = jax.lax.optimization_barrier(m * jnp.float32(1.0 / s))
+            out = combine(m, jnp.roll(m, 1, axis=0), jnp.roll(m, -1, axis=0))
+            # pin the stage output: downstream consumers (next round's loss)
+            # must see the same fusion boundary in both programs
+            out = jax.lax.optimization_barrier(out)
+            return jnp.broadcast_to(
+                out[:, None], grp.shape).reshape(x.shape).astype(leaf.dtype)
+        return jax.tree.map(one, tree)
+
+    if axis_name is None:
+        return dense(params)
+    names = _axis_tuple(axis_name)
+    aligned = len(names) == 2 and jax.lax.psum(1, names[0]) == g
+    if not aligned:
+        src = client_all_gather(params, axis_name) if full is None else full
+        return client_local_rows(dense(src), axis_name, n_shards)
+    pod_axis, data_axis = names
+    fwd = [((j + 1) % g, j) for j in range(g)]   # nxt[p] = mean of pod p+1
+    bwd = [((j - 1) % g, j) for j in range(g)]   # prv[p] = mean of pod p-1
+
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        blk = jax.lax.all_gather(x, data_axis, axis=0, tiled=True)
+        blk = jax.lax.optimization_barrier(blk)   # in-pod rows: [S, ...]
+        s = blk.shape[0]
+        # [1, S, ...] sum(axis=1) mirrors the dense [G, S, ...] reduce
+        # structure, so the cluster sum is bitwise the dense one; same
+        # barrier pin on the scaled mean as the dense path
+        m = jax.lax.optimization_barrier(
+            blk.reshape((1, s) + blk.shape[1:]).sum(axis=1)[0]
+            * jnp.float32(1.0 / s))
+        nxt = jax.lax.ppermute(m, pod_axis, fwd)
+        prv = jax.lax.ppermute(m, pod_axis, bwd)
+        out = jax.lax.optimization_barrier(combine(m, prv, nxt))
+        return jnp.broadcast_to(out[None], x.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
 
 
 # ---------------------------------------------------------------------------

@@ -68,8 +68,9 @@ Python loop stay exactly equivalent for every topology.
 
 Time-varying ``Schedule`` topologies (gossip rotations, epoch-alternating
 overlays, SNR link-quality fading) compile into the same single scan with
-no retrace across K — see ``make_communicate`` for the three dispatch
-strategies — and ``RoundSpec.data_weights`` threads |D_i| row reweighting
+no retrace across K — ``topology.resolve_mix_plan`` is the single surface
+that picks the executor mode ``make_communicate`` runs — and
+``RoundSpec.data_weights`` threads |D_i| row reweighting
 into every dense mix. ``core/spectral.py`` turns any topology/schedule
 into its consensus-rate diagnostic (1 - |lambda_2(W)|, ergodic gap).
 
@@ -187,8 +188,9 @@ class RoundSpec:
     mine_chunk: int = 1024
     # Sparse mix dispatch (docs/architecture.md §Sparse lowering):
     #   None (auto) — GATHER-kind topologies whose exported SparseLowering
-    #     has padded max degree ≪ C (max_degree * _SEGMENT_DEGREE_FACTOR
-    #     <= n_clients) reroute their mix through aggregation.mix_segment —
+    #     has padded max degree ≪ C (max_degree * topology
+    #     .SEGMENT_DEGREE_FACTOR <= n_clients) reroute their mix through
+    #     aggregation.mix_segment —
     #     O(C·deg) gather + segment_sum instead of the dense O(C²) matmul.
     #     ExplicitSparse topologies (SEGMENT kind) always mix here. Every
     #     shipped small-C config keeps its dense path (and its bits).
@@ -342,52 +344,39 @@ def make_perturb(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     return perturb
 
 
-# Auto sparse-mix crossover: reroute a GATHER mix through segment_sum only
-# when the padded max degree is ≪ C — degree * 8 <= C keeps every shipped
-# small-C config (C <= 20, windows/active sets >= C/8) on its dense bitwise
-# path while cohort-scale populations (deg 64, C 10k) go sparse.
-_SEGMENT_DEGREE_FACTOR = 8
+# Back-compat alias: the auto sparse-mix crossover now lives with the rest
+# of the mix dispatch in core/topology.py (resolve_mix_plan).
+_SEGMENT_DEGREE_FACTOR = topology_lib.SEGMENT_DEGREE_FACTOR
 
 
 def segment_lowering(spec: RoundSpec
                      ) -> Optional[topology_lib.SparseLowering]:
     """The SparseLowering the communicate stage will mix through, or None
-    when this spec mixes densely (see ``RoundSpec.sparse_mix``). Pure
-    function of the spec — ``make_communicate`` dispatches on it and
-    ``dispatch_plan`` reports it, one decision surface for both."""
-    if spec.sparse_mix is False:
-        return None
-    topo = spec.topology
-    kind = topo.lowering(spec.n_clients,
-                         fast_allreduce=spec.fast_allreduce).kind
-    # mirror make_communicate's |D_i| reroute: weighted permute lowerings
-    # fall back to the dense-matrix kind before sparse dispatch is judged
-    if spec.data_weights is not None and \
-            kind == topology_lib.NEIGHBOR_PERMUTE:
-        kind = topology_lib.GATHER
-    if kind == topology_lib.SEGMENT:
-        return topo.sparse_lowering(spec.n_clients)
-    if spec.sparse_mix is True:
-        sp = topo.sparse_lowering(spec.n_clients)
-        if sp is None:
-            raise ValueError(
-                f"sparse_mix=True but {type(topo).__name__} exports no "
-                "static sparse lowering (stochastic topologies and "
-                "schedules change their graph per round; very large C "
-                "cannot be densified to derive one)")
-        return sp
-    # auto: only GATHER-kind dense mixes, and never preempt the opt-in
-    # psum/fused tiers the user asked for explicitly
-    if kind != topology_lib.GATHER or spec.fast_allreduce or spec.fused_mix:
-        return None
-    sp = topo.sparse_lowering(spec.n_clients)
-    if sp is not None and \
-            sp.max_degree * _SEGMENT_DEGREE_FACTOR <= spec.n_clients:
-        return sp
-    return None
+    when this spec mixes densely (see ``RoundSpec.sparse_mix``). Thin view
+    over ``topology.resolve_mix_plan`` — the mix decisions live there, this
+    just exposes the sparse payload (|D_i| reweighting already folded in)."""
+    return topology_lib.resolve_mix_plan(spec).sparse
 
 
-def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
+def _mesh_axes_of(axis_name, n_shards: int, axis_sizes=()):
+    """``resolve_mix_plan``'s ``mesh_axes`` from a stage factory's
+    ``(axis_name, n_shards, axis_sizes)``: ``None`` single-device, else
+    ``((name, extent), ...)``. When per-axis extents are unknown (a caller
+    that predates ``ScanCarryPlan.axis_sizes``) only the total shard count
+    is attributed — which is all the resolver consumes; the collectives
+    read real extents from the mesh at trace time."""
+    if axis_name is None:
+        return None
+    names = ((axis_name,) if isinstance(axis_name, str)
+             else tuple(axis_name))
+    sizes = tuple(int(s) for s in axis_sizes)
+    if len(sizes) != len(names):
+        sizes = (1,) * (len(names) - 1) + (int(n_shards),)
+    return tuple(zip(names, sizes))
+
+
+def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1,
+                     axis_sizes=()):
     """Steps 2+5 stage factory: ``(params, prev_params, k_topo, round_idx)
     -> (mixed_params, digest, divergence, extra_metrics)``.
 
@@ -396,15 +385,13 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     full broadcast so the hash chain is topology-independent), divergence is
     the pre-mix client spread (delta diagnostic, Def. 1), then the
     topology's row-stochastic ``W`` mixes the models — through the
-    :class:`~repro.core.topology.MixLowering` the topology advertises:
-
-      * ``all_reduce`` — FullMesh; single-device this IS
-        ``aggregation.fedavg``, bit-for-bit the paper baseline.
-      * ``neighbor_permute`` — Ring; fixed-order window accumulation, halo
-        ``collective_permute``s on the mesh (falls back to the gathered
-        roll form when the window overruns the shard block).
-      * ``gather`` — any ``W``; the dense ``aggregation.mix`` matmul,
-        all-gather + local-rows slice on the mesh.
+    executor mode a single :func:`~repro.core.topology.resolve_mix_plan`
+    call picks (FedAvg mean, halo ``collective_permute`` window, cluster
+    two-level exchange, sparse segment-sum, psum tier, or the dense
+    all-gather matmul). This factory is a thin executor over that
+    :class:`~repro.core.topology.MixPlan` — it holds NO lowering-kind
+    logic of its own, so ``dispatch_plan``'s report and the traced mix
+    cannot drift.
 
     Sharded, the digest / divergence / detection diagnostics all-gather the
     broadcast set and run the identical full-width math (the digest folds a
@@ -419,7 +406,8 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     deterministic schedule's matrices become a static ``[P, C, C]`` table
     indexed by the traced round counter; a :class:`GossipRotation`'s
     round-dependent offsets become a ``lax.switch`` over P static permute
-    branches (``mix_shift_halo`` on a single mesh axis, rolls otherwise);
+    branches (``mix_shift_halo`` — its linearized permutes cover compound
+    ``('pod','data')`` client axes too — or rolls off-mesh);
     stochastic schedules draw their phase graph from ``k_topo`` like
     ``RandomGraph``. ``spec.data_weights`` (|D_i| row reweighting) rides the
     dense-matrix paths — permute lowerings bake uniform window weights, so a
@@ -447,73 +435,33 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
     to win), as are the psum'd diagnostics of the fast_dense path (the fused
     sweep needs the client axis resident, psum partials don't)."""
     topo = spec.topology
-    low = topo.lowering(spec.n_clients, fast_allreduce=spec.fast_allreduce)
-    n_local = spec.n_clients // n_shards
-    single_axis = (axis_name is None or isinstance(axis_name, str)
-                   or len(axis_name) == 1)
-    halo_axis = (axis_name if isinstance(axis_name, (str, type(None)))
-                 else axis_name[0])
-    if spec.data_weights is not None and \
-            len(spec.data_weights) != spec.n_clients:
-        raise ValueError(
-            f"data_weights has {len(spec.data_weights)} entries, expected "
-            f"n_clients={spec.n_clients}")
-    weights = (jnp.asarray(spec.data_weights, jnp.float32)
-               if spec.data_weights is not None else None)
-    kind = low.kind
-    # |D_i| weights reshape each row of W; the permute lowerings hard-code
-    # uniform window weights, so weighted mixes go through the dense matrix.
-    if weights is not None and kind == topology_lib.NEIGHBOR_PERMUTE:
-        kind = topology_lib.GATHER
-    # sparse segment mix (RoundSpec.sparse_mix): the edge lists are static
-    # host arrays baked into the trace; |D_i| reweighting folds into the
-    # edge weights here so the traced mix is one gather + segment_sum.
-    seg = segment_lowering(spec)
-    if seg is not None and spec.data_weights is not None:
-        seg = seg.reweighted(np.asarray(spec.data_weights, np.float32))
+    plan = topology_lib.resolve_mix_plan(
+        spec, _mesh_axes_of(axis_name, n_shards, axis_sizes))
+    mode = plan.mode
+    # plan payloads → device constants baked into the trace. Edge lists /
+    # weight rows are static host arrays, so no retrace across K rounds.
+    weights = (jnp.asarray(plan.weights, jnp.float32)
+               if plan.weights is not None else None)
+    psum_row = (jnp.asarray(plan.psum_row, jnp.float32)
+                if plan.psum_row is not None else None)
+    seg = plan.sparse
     seg_idx = seg.neighbor_idx if seg is not None else None
     seg_w = seg.edge_w if seg is not None else None
-    # the opt-in psum tier covers the dense kinds only (permute lowerings
-    # already move O(window) data and stay bitwise); a forced segment mix
-    # takes precedence — it moves O(C·deg), less than the psum's O(C)
-    fast_dense = (spec.fast_allreduce and seg is None
-                  and kind in (topology_lib.PSUM, topology_lib.GATHER))
-    psum_weights = weights
-    if kind == topology_lib.PSUM and not topo.is_full_mesh:
-        row = jnp.asarray(topo.uniform_row(spec.n_clients), jnp.float32)
-        psum_weights = row if weights is None else row * weights
-    rot_offsets = (low.offsets_table
-                   if kind == topology_lib.NEIGHBOR_PERMUTE else ())
-    # halo needs the window inside one neighbor block and a single mesh axis
-    halo_ok = (kind == topology_lib.NEIGHBOR_PERMUTE and single_axis
-               and low.offsets and -min(low.offsets) <= n_local
-               and max(low.offsets) <= n_local)
-    is_schedule = isinstance(topo, topology_lib.Schedule)
-    period = topo.period(spec.n_clients) if is_schedule else 1
-    # Schedules on the gather path need no special casing here:
-    # Schedule.matrix already compiles a deterministic schedule to a static
-    # [P, C, C] table indexed by the traced round counter (and a stochastic
-    # one to a switch over keyed draws), so the generic topo.matrix call
-    # below traces to exactly that.
 
-    def mix_scheduled_shifts(params, full, phase):
+    def mix_scheduled_shifts(params, phase):
         """Rotation dispatch: lax.switch over one static branch per phase."""
         if axis_name is None:
             return jax.lax.switch(
-                phase, [lambda p, o=o: aggregation.mix_rolls(p, o, low.weight)
-                        for o in rot_offsets], params)
-        if single_axis:
-            return jax.lax.switch(
-                phase, [lambda p, o=o: aggregation.mix_shift_halo(
-                    p, o, low.weight, halo_axis) for o in rot_offsets],
-                params)
-        mixed = jax.lax.switch(
-            phase, [lambda f, o=o: aggregation.mix_rolls(f, o, low.weight)
-                    for o in rot_offsets], full)
-        return aggregation.client_local_rows(mixed, axis_name, n_shards)
+                phase,
+                [lambda p, o=o: aggregation.mix_rolls(p, o, plan.weight)
+                 for o in plan.offsets_table], params)
+        return jax.lax.switch(
+            phase, [lambda p, o=o: aggregation.mix_shift_halo(
+                p, o, plan.weight, axis_name) for o in plan.offsets_table],
+            params)
 
     def communicate(params, prev_params, k_topo, round_idx, full=None):
-        if fast_dense:
+        if plan.fast_diagnostics:
             # tolerance tier: psum'd diagnostics + mix, no broadcast gather.
             # The digest reassociates fp32 under shard_map, so the ledger
             # hashes fork from the bitwise engine (documented + tested).
@@ -530,8 +478,8 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
                 suspects, _ = detection.detect_lazy_round(
                     det_full, prev_full, threshold_frac=spec.detect_threshold)
                 extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-            if kind == topology_lib.PSUM:
-                params = aggregation.mix_psum(params, psum_weights,
+            if mode == topology_lib.EXEC_PSUM:
+                params = aggregation.mix_psum(params, psum_row,
                                               axis_name=axis_name,
                                               n_shards=n_shards)
             else:
@@ -539,7 +487,7 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
                                 round_idx=round_idx)
                 params = aggregation.mix_psum_dense(
                     params, w, weights, axis_name=axis_name,
-                    n_shards=n_shards, use_kernel=spec.fused_mix,
+                    n_shards=n_shards, use_kernel=plan.use_kernel,
                     interpret=spec.kernel_interpret)
             return params, digest, divergence, extra
         if full is None:
@@ -563,39 +511,40 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1):
             suspects, _ = detection.detect_lazy_round(
                 full, prev_full, threshold_frac=spec.detect_threshold)
             extra["n_suspects"] = jnp.sum(suspects).astype(jnp.int32)
-        if seg is not None:
+        if mode == topology_lib.EXEC_SEGMENT:
             # sparse segment mix: O(C·deg) gather + segment_sum over the
             # broadcast set (reuses the diagnostics gather); |D_i| weights
-            # were folded into seg_w at factory-build time
+            # were folded into seg_w by the resolver
             params = aggregation.mix_segment(params, seg_idx, seg_w,
                                              axis_name=axis_name,
                                              n_shards=n_shards, full=full)
-        elif kind == topology_lib.ALL_REDUCE:
+        elif mode == topology_lib.EXEC_FEDAVG:
             params = aggregation.mix_all_reduce(params, weights,
                                                 axis_name=axis_name,
                                                 n_shards=n_shards, full=full)
-        elif rot_offsets:
-            phase = jnp.mod(jnp.asarray(round_idx, jnp.int32), period)
-            params = mix_scheduled_shifts(params, full, phase)
-        elif halo_ok:
-            params = aggregation.mix_neighbor_halo(params, low.offsets,
-                                                   low.weight, halo_axis)
-        elif kind == topology_lib.NEIGHBOR_PERMUTE and single_axis \
-                and axis_name is not None:
-            params = aggregation.mix_shift_halo(params, low.offsets,
-                                                low.weight, halo_axis)
-        elif kind == topology_lib.NEIGHBOR_PERMUTE:
-            mixed = aggregation.mix_rolls(full, low.offsets, low.weight)
-            params = aggregation.client_local_rows(mixed, axis_name, n_shards)
+        elif mode == topology_lib.EXEC_SHIFT_TABLE:
+            phase = jnp.mod(jnp.asarray(round_idx, jnp.int32), plan.period)
+            params = mix_scheduled_shifts(params, phase)
+        elif mode == topology_lib.EXEC_CLUSTER:
+            params = aggregation.mix_cluster(params, plan.n_clusters,
+                                             plan.inter_weight, axis_name,
+                                             n_shards=n_shards, full=full)
+        elif mode == topology_lib.EXEC_HALO:
+            params = aggregation.mix_neighbor_halo(params, plan.offsets,
+                                                   plan.weight, axis_name)
+        elif mode == topology_lib.EXEC_SHIFT_HALO:
+            params = aggregation.mix_shift_halo(params, plan.offsets,
+                                                plan.weight, axis_name)
         else:
             w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
             params = aggregation.mix_gather(params, w, weights,
                                             axis_name=axis_name,
                                             n_shards=n_shards, full=full,
-                                            use_kernel=spec.fused_mix,
+                                            use_kernel=plan.use_kernel,
                                             interpret=spec.kernel_interpret)
         return params, digest, divergence, extra
 
+    communicate.plan = plan
     return communicate
 
 
@@ -717,7 +666,8 @@ def make_finalize(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
 
 def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
                           n_shards: int = 1,
-                          n_rounds: Optional[int] = None):
+                          n_rounds: Optional[int] = None,
+                          axis_sizes=()):
     """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
 
     ``batch`` leaves have leading client axis [C, local_batch, ...]. The
@@ -730,10 +680,14 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
     collectives (see each stage factory). ``axis_name=None`` is the exact
     single-device computation. ``n_rounds`` (when the driver knows the
     horizon) lets the finalize stage force a global-loss eval on the last
-    round regardless of the ``eval_every`` stride."""
+    round regardless of the ``eval_every`` stride. ``axis_sizes`` (the
+    mesh's per-axis extents, ``ScanCarryPlan.axis_sizes``) refines the mix
+    resolution on compound client axes; when omitted only the total
+    ``n_shards`` is attributed."""
     local_train = make_local_train(loss_fn, spec, n_shards)
     perturb = make_perturb(spec, axis_name, n_shards)
-    communicate = make_communicate(spec, axis_name, n_shards)
+    communicate = make_communicate(spec, axis_name, n_shards,
+                                   axis_sizes=axis_sizes)
     mine = make_mine(spec, axis_name, n_shards)
     finalize = make_finalize(loss_fn, spec, axis_name, n_rounds)
 
@@ -802,10 +756,15 @@ def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
         either way.
       ``mix`` — ``"fused"`` (Pallas row-block matmul + one-sweep
         diagnostics, tolerance tier) when ``spec.fused_mix``;
-        ``"segment"`` when :func:`segment_lowering` reroutes the mix
-        through the sparse gather + ``segment_sum`` path (ExplicitSparse
-        topologies, low-degree GATHER mixes, or ``spec.sparse_mix=True``);
-        else ``"jnp"``.
+        ``"segment"`` when the resolver reroutes the mix through the
+        sparse gather + ``segment_sum`` path (ExplicitSparse topologies,
+        low-degree GATHER mixes, or ``spec.sparse_mix=True``); else
+        ``"jnp"``.
+      ``mix_mode`` — the resolved ``MixPlan.mode`` executor strategy
+        (``topology.EXEC_*``). Reported from the SAME
+        :func:`topology.resolve_mix_plan` call ``make_communicate``
+        executes, so report and trace cannot drift (pinned in
+        tests/test_hierarchy.py).
       ``reason`` — one phrase saying why the driver was chosen.
     """
     plan: Dict[str, str] = {}
@@ -833,12 +792,9 @@ def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
         plan["pow"] = "fori_loop"
     else:
         plan["pow"] = "kernel" if spec.use_kernel else "fori_loop"
-    if spec.fused_mix:
-        plan["mix"] = "fused"
-    elif segment_lowering(spec) is not None:
-        plan["mix"] = "segment"
-    else:
-        plan["mix"] = "jnp"
+    mplan = topology_lib.resolve_mix_plan(spec)
+    plan["mix"] = mplan.mix
+    plan["mix_mode"] = mplan.mode
     return plan
 
 # Jitted runners cached on (loss_fn identity, static config). A weakref
@@ -861,8 +817,10 @@ def _scan_runner(loss_fn: LossFn, spec: RoundSpec, n_rounds: int,
     donated carry between rounds."""
     axis_name = plan.client_axes if mesh is not None else None
     n_shards = plan.n_shards if mesh is not None else 1
+    axis_sizes = plan.axis_sizes if mesh is not None else ()
     round_fn = make_integrated_round(loss_fn, spec, axis_name=axis_name,
-                                     n_shards=n_shards, n_rounds=n_rounds)
+                                     n_shards=n_shards, n_rounds=n_rounds,
+                                     axis_sizes=axis_sizes)
 
     def run(state: RoundState, batch):
         TRACE_COUNTS["scan_runner"] += 1
@@ -1107,7 +1065,8 @@ def _cohort_round_runner(loss_fn: LossFn, spec: RoundSpec,
     round_fn = make_integrated_round(loss_fn, spec,
                                      axis_name=plan.client_axes,
                                      n_shards=plan.n_shards,
-                                     n_rounds=n_rounds)
+                                     n_rounds=n_rounds,
+                                     axis_sizes=plan.axis_sizes)
     state_specs = RoundState(params=plan.client_spec(), key=P(),
                              round_idx=P(), prev_hash=P())
     fn = shard_map(round_fn, mesh=mesh,

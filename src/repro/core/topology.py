@@ -94,6 +94,33 @@ PSUM = "psum"
 # topologies here when their exported sparse form has max degree ≪ C
 # (``rounds.segment_lowering``).
 SEGMENT = "segment"
+# Two-level kind (:class:`ClusterTopology`): dense intra-cluster mean +
+# narrow ring exchange between cluster means, executed by
+# ``aggregation.mix_cluster`` — on a cluster-aligned ('pod', 'data') mesh
+# the in-cluster reduce stays inside a pod and only the two neighbor
+# cluster means cross pods. Bitwise (fixed-order combine), unlike PSUM.
+CLUSTER = "cluster"
+
+# Executor strategies a resolved :class:`MixPlan` selects for the
+# communicate stage. Deliberately DISJOINT from the MixLowering kind
+# strings above: ``rounds.make_communicate`` switches on ``plan.mode``
+# only, so no kind-string comparison exists outside this module (the
+# single-decision-surface contract repro-lint rule RL205 enforces).
+EXEC_FEDAVG = "exec_fedavg"            # aggregation.mix_all_reduce
+EXEC_PSUM = "exec_psum"                # aggregation.mix_psum (tolerance)
+EXEC_PSUM_DENSE = "exec_psum_dense"    # aggregation.mix_psum_dense (tol.)
+EXEC_SEGMENT = "exec_segment"          # aggregation.mix_segment
+EXEC_SHIFT_TABLE = "exec_shift_table"  # lax.switch over per-phase shifts
+EXEC_HALO = "exec_halo"                # aggregation.mix_neighbor_halo
+EXEC_SHIFT_HALO = "exec_shift_halo"    # aggregation.mix_shift_halo
+EXEC_CLUSTER = "exec_cluster"          # aggregation.mix_cluster
+EXEC_GATHER = "exec_gather"            # aggregation.mix_gather (needs W)
+
+# Auto sparse-mix crossover: reroute a GATHER mix through segment_sum only
+# when the padded max degree is ≪ C — degree * 8 <= C keeps every shipped
+# small-C config (C <= 20, windows/active sets >= C/8) on its dense bitwise
+# path while cohort-scale populations (deg 64, C 10k) go sparse.
+SEGMENT_DEGREE_FACTOR = 8
 
 # Largest C for which a sparse topology may be densified back to a [C, C]
 # matrix (SparseLowering.to_dense, spectral diagnostics). 4096² fp32 is
@@ -138,6 +165,202 @@ class MixLowering:
     offsets: Tuple[int, ...] = ()
     weight: float = 0.0
     offsets_table: Tuple[Tuple[int, ...], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MixPlan:
+    """The fully resolved execution plan for one spec's Steps 2+5 mix.
+
+    Built exclusively by :func:`resolve_mix_plan` — the ONE place where the
+    topology's advertised :class:`MixLowering`, the |D_i| data-weight
+    reroute, the sparse segment crossover, and the fast-psum / fused-kernel
+    tiers are reconciled. ``rounds.make_communicate`` executes the plan by
+    switching on :attr:`mode` (an ``EXEC_*`` strategy, disjoint from the
+    kind strings so no kind comparison leaks out of this module), and
+    ``rounds.dispatch_plan`` reports :attr:`mix` / :attr:`mode` verbatim —
+    they cannot drift because neither re-derives anything.
+
+    ``weights`` / ``psum_row`` / ``sparse`` are host-side numpy payloads
+    (the executor converts to device arrays at trace time), which is why
+    the dataclass is ``eq=False``: plans are per-factory artifacts, never
+    cache keys — the hashable ``RoundSpec`` stays the cache key.
+    """
+    mode: str                   # EXEC_* executor strategy
+    kind: str                   # MixLowering kind after reroutes
+    mix: str                    # dispatch tier: "fused" | "segment" | "jnp"
+    offsets: Tuple[int, ...] = ()
+    weight: float = 0.0
+    offsets_table: Tuple[Tuple[int, ...], ...] = ()
+    period: int = 1             # schedule period (1 for static topologies)
+    n_shards: int = 1           # product of the mesh_axes extents
+    fast_diagnostics: bool = False   # psum'd digest/divergence (tolerance)
+    use_kernel: bool = False    # fused Pallas mix tier (spec.fused_mix)
+    needs_matrix: bool = False  # executor must trace topo.matrix(...)
+    n_clusters: int = 0         # EXEC_CLUSTER: G
+    inter_weight: float = 0.0   # EXEC_CLUSTER: alpha
+    # eq=False (identity hash): a plan is never a static-arg/lru key, so
+    # the unhashable-frozen-dataclass concern behind RL102 does not apply
+    # repro-lint: disable=RL102
+    weights: Optional[np.ndarray] = None    # |D_i| data weights [C]
+    # repro-lint: disable=RL102
+    psum_row: Optional[np.ndarray] = None   # EXEC_PSUM per-client weighting
+    sparse: Optional["SparseLowering"] = None   # EXEC_SEGMENT edge lists
+
+
+def _resolve_sparse(spec, topo, kind) -> "SparseLowering | None":
+    """The SparseLowering this spec mixes through, or None for dense mixes
+    (``RoundSpec.sparse_mix`` tri-state; see :func:`resolve_mix_plan`)."""
+    if spec.sparse_mix is False:
+        return None
+    if kind == SEGMENT:
+        return topo.sparse_lowering(spec.n_clients)
+    if spec.sparse_mix is True:
+        sp = topo.sparse_lowering(spec.n_clients)
+        if sp is None:
+            raise ValueError(
+                f"sparse_mix=True but {type(topo).__name__} exports no "
+                "static sparse lowering (stochastic topologies and "
+                "schedules change their graph per round; very large C "
+                "cannot be densified to derive one)")
+        return sp
+    # auto: only GATHER-kind dense mixes, and never preempt the opt-in
+    # psum/fused tiers the user asked for explicitly
+    if kind != GATHER or spec.fast_allreduce or spec.fused_mix:
+        return None
+    sp = topo.sparse_lowering(spec.n_clients)
+    if sp is not None and \
+            sp.max_degree * SEGMENT_DEGREE_FACTOR <= spec.n_clients:
+        return sp
+    return None
+
+
+def resolve_mix_plan(spec, mesh_axes=None) -> MixPlan:
+    """Resolve a round spec's mix into a :class:`MixPlan` — the single
+    decision surface for HOW Steps 2+5 execute.
+
+    ``spec`` is duck-typed (``rounds.RoundSpec`` in practice): the resolver
+    reads ``topology``, ``n_clients``, ``data_weights``, ``fast_allreduce``,
+    ``fused_mix`` and ``sparse_mix``. ``mesh_axes`` is ``None`` for
+    single-device execution or a tuple of ``(axis_name, extent)`` pairs for
+    the client-sharded mesh — only the extent product (the shard count,
+    which bounds the one-block halo window) feeds the decision; per-axis
+    extents are read back from the mesh at trace time by the collectives.
+
+    Decisions folded in (each previously derived independently somewhere in
+    ``core/rounds.py``):
+
+      * the |D_i| data-weight reroute: permute/cluster lowerings bake
+        uniform weights, so a weighted spec mixes through its dense matrix;
+      * the sparse segment crossover (native SEGMENT topologies, forced
+        ``sparse_mix=True``, or the auto max-degree ≪ C reroute);
+      * the ``fast_allreduce`` psum tier (uniform-row → EXEC_PSUM with the
+        pre-weighted row, dense → EXEC_PSUM_DENSE) and its psum'd
+        diagnostics;
+      * halo feasibility: NEIGHBOR_PERMUTE offsets inside one shard block
+        run the two-permute halo (EXEC_HALO), anything else the whole-block
+        shift form (EXEC_SHIFT_HALO) — both linearize multi-axis meshes, so
+        there is no gather fallback for permute kinds anymore.
+
+    >>> from types import SimpleNamespace
+    >>> def _spec(topo, **kw):
+    ...     base = dict(topology=topo, n_clients=8, data_weights=None,
+    ...                 fast_allreduce=False, fused_mix=False,
+    ...                 sparse_mix=None)
+    ...     return SimpleNamespace(**{**base, **kw})
+    >>> resolve_mix_plan(_spec(FullMesh())).mode
+    'exec_fedavg'
+    >>> resolve_mix_plan(_spec(Ring(neighbors=1))).mode
+    'exec_halo'
+    >>> resolve_mix_plan(_spec(Ring(neighbors=2)),
+    ...                  (("pod", 2), ("data", 4))).mode
+    'exec_shift_halo'
+    >>> resolve_mix_plan(_spec(FullMesh(), fast_allreduce=True)).mode
+    'exec_psum'
+    >>> resolve_mix_plan(_spec(ClusterTopology(n_clusters=2))).mode
+    'exec_cluster'
+    >>> resolve_mix_plan(_spec(RandomGraph(p_link=0.5))).needs_matrix
+    True
+    """
+    topo = spec.topology
+    c = spec.n_clients
+    n_shards = 1
+    for _, extent in (mesh_axes or ()):
+        n_shards *= max(int(extent), 1)
+    n_local = c // n_shards
+
+    low = topo.lowering(c, fast_allreduce=spec.fast_allreduce)
+    kind = low.kind
+
+    weights = None
+    if spec.data_weights is not None:
+        if len(spec.data_weights) != c:
+            raise ValueError(
+                f"data_weights has {len(spec.data_weights)} entries, "
+                f"expected n_clients={c}")
+        weights = np.asarray(spec.data_weights, np.float32)
+
+    # |D_i| weights reshape each row of W; the permute and cluster lowerings
+    # hard-code uniform weights, so weighted mixes go through the matrix.
+    if weights is not None and kind in (NEIGHBOR_PERMUTE, CLUSTER):
+        kind = GATHER
+
+    sparse = _resolve_sparse(spec, topo, kind)
+    if sparse is not None and weights is not None:
+        # |D_i| reweighting folds into the edge weights so the traced mix
+        # stays one gather + segment_sum
+        sparse = sparse.reweighted(weights)
+
+    # the opt-in psum tier covers the dense kinds only (permute lowerings
+    # already move O(window) data and stay bitwise); a forced segment mix
+    # takes precedence — it moves O(C·deg), less than the psum's O(C)
+    fast_dense = (spec.fast_allreduce and sparse is None
+                  and kind in (PSUM, GATHER))
+
+    psum_row = None
+    if kind == PSUM:
+        if topo.is_full_mesh:
+            psum_row = weights
+        else:
+            row = np.asarray(topo.uniform_row(c), np.float32)
+            psum_row = row if weights is None else row * weights
+
+    period = topo.period(c) if isinstance(topo, Schedule) else 1
+
+    if fast_dense:
+        mode = EXEC_PSUM if kind == PSUM else EXEC_PSUM_DENSE
+    elif sparse is not None:
+        mode = EXEC_SEGMENT
+    elif kind == ALL_REDUCE:
+        mode = EXEC_FEDAVG
+    elif kind == CLUSTER:
+        mode = EXEC_CLUSTER
+    elif kind == NEIGHBOR_PERMUTE and low.offsets_table:
+        mode = EXEC_SHIFT_TABLE
+    elif kind == NEIGHBOR_PERMUTE:
+        # the two-permute halo needs the window inside one shard block;
+        # larger shifts use the whole-block permute form — both linearize
+        # multi-axis meshes, so permute kinds never fall back to a gather
+        halo_ok = (low.offsets and -min(low.offsets) <= n_local
+                   and max(low.offsets) <= n_local)
+        mode = EXEC_HALO if halo_ok else EXEC_SHIFT_HALO
+    else:
+        mode = EXEC_GATHER
+
+    n_clusters = int(getattr(topo, "n_clusters", 0)) if kind == CLUSTER \
+        else 0
+    inter_w = float(getattr(topo, "inter_weight", 0.0)) if kind == CLUSTER \
+        else 0.0
+
+    return MixPlan(
+        mode=mode, kind=kind,
+        mix=("fused" if spec.fused_mix
+             else "segment" if sparse is not None else "jnp"),
+        offsets=low.offsets, weight=low.weight,
+        offsets_table=low.offsets_table, period=period, n_shards=n_shards,
+        fast_diagnostics=fast_dense, use_kernel=spec.fused_mix,
+        needs_matrix=mode in (EXEC_GATHER, EXEC_PSUM_DENSE),
+        n_clusters=n_clusters, inter_weight=inter_w,
+        weights=weights, psum_row=psum_row, sparse=sparse)
 
 
 class SparseLowering:
@@ -501,6 +724,91 @@ class PairShift(Topology):
         ``fast_allreduce`` changes nothing."""
         return MixLowering(kind=NEIGHBOR_PERMUTE,
                            offsets=(0, self.shift % n_clients), weight=0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology(Topology):
+    """Two-level hierarchical mix: dense intra-cluster averaging + a sparse
+    ring exchange between cluster means (the cluster-then-global aggregation
+    of D2D hierarchical FL / two-tier blockchain FL, arXiv:2009.09338 — the
+    ~75% traffic-reduction design of SNIPPETS.md Snippet 2).
+
+    The ``n_clusters = G`` contiguous clusters each hold ``S = C / G``
+    clients. Every client first adopts its cluster mean, then clusters
+    exchange means on a ring: cluster ``g`` keeps weight ``1 - inter_weight``
+    on its own mean and puts ``inter_weight / 2`` on each ring neighbor.
+    The mixing matrix is the Kronecker product ``W = B ⊗ (J_S / S)`` of the
+    cluster-ring circulant ``B`` with the in-cluster averaging block — row
+    stochastic by construction, eigenvalues ``(1 - a) + a·cos(2πk/G)``
+    (``core/spectral.cluster_spectral_gap`` has the closed form).
+
+    On a cluster-aligned ``('pod', 'data')`` mesh (pod extent == G) the mix
+    lowers to an in-pod gather of ``S`` rows plus TWO cross-pod model-sized
+    ``ppermute``s — O(S + 2) models moved versus the flat gather's O(C) —
+    while staying bitwise (``aggregation.mix_cluster``; fixed-order
+    barrier-pinned combine, no psum).
+
+    >>> import numpy as np
+    >>> w = np.asarray(ClusterTopology(n_clusters=2,
+    ...                                inter_weight=0.5).matrix(4))
+    >>> bool(np.allclose(w.sum(axis=1), 1.0))
+    True
+    >>> [round(float(v), 3) for v in w[0]]
+    [0.25, 0.25, 0.25, 0.25]
+    >>> ClusterTopology(n_clusters=4).lowering(8).kind
+    'cluster'
+    """
+    n_clusters: int
+    inter_weight: float = 0.3
+
+    def __post_init__(self):
+        if self.n_clusters < 1:
+            raise ValueError("ClusterTopology needs n_clusters >= 1")
+        if not 0.0 <= self.inter_weight <= 1.0:
+            raise ValueError("inter_weight must be in [0, 1]")
+
+    def _check_divides(self, n_clients: int) -> int:
+        if n_clients % self.n_clusters != 0:
+            raise ValueError(
+                f"n_clients={n_clients} not divisible by "
+                f"n_clusters={self.n_clusters}: clusters are contiguous "
+                "equal-size client blocks")
+        return n_clients // self.n_clusters
+
+    def _cluster_ring(self) -> np.ndarray:
+        """The ``[G, G]`` circulant ``B`` over cluster means."""
+        g = self.n_clusters
+        b = np.zeros((g, g), np.float32)
+        for i in range(g):
+            b[i, i] += 1.0 - self.inter_weight
+            b[i, (i - 1) % g] += self.inter_weight / 2.0
+            b[i, (i + 1) % g] += self.inter_weight / 2.0
+        return b
+
+    def matrix(self, n_clients: int, *, key=None, round_idx=None) -> jnp.ndarray:
+        s = self._check_divides(n_clients)
+        w = np.kron(self._cluster_ring(),
+                    np.full((s, s), 1.0 / s, np.float32))
+        return jnp.asarray(w.astype(np.float32))
+
+    def uniform_row(self, n_clients: int):
+        """Constant-row exactly when the cluster circulant ``B`` is
+        (G == 1, or the degenerate small-G weights that make every row of
+        ``B`` equal) — checked on the tiny ``[G, G]`` block, never by
+        densifying ``W`` at population scale."""
+        s = self._check_divides(n_clients)
+        b = self._cluster_ring()
+        if not (b == b[0][None, :]).all():
+            return None
+        return np.repeat(b[0], s).astype(np.float32) / np.float32(s)
+
+    def lowering(self, n_clients: int, *,
+                 fast_allreduce: bool = False) -> MixLowering:
+        """Always the :data:`CLUSTER` kind: the two-level mix already moves
+        O(S + 2) models and stays bitwise, so ``fast_allreduce`` (a
+        reassociating psum that would fork the ledger) changes nothing."""
+        self._check_divides(n_clients)
+        return MixLowering(kind=CLUSTER, weight=self.inter_weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -925,12 +1233,17 @@ def from_name(name: str) -> Topology:
     | ``alt[:ring_rounds[:mesh_rounds]]`` (ring epochs + full-mesh sync) |
     ``snr[:fading_period]`` (link-quality weighting).
 
+    Hierarchical: ``cluster:n_clusters[:inter_weight]`` — e.g. ``cluster:4``
+    or ``cluster:4:0.5`` (contiguous clusters, ring-coupled means).
+
     >>> from_name("rotate") == GossipRotation()
     True
     >>> from_name("alt:3:1").phases[0]
     (Ring(neighbors=1), 3)
     >>> from_name("snr:4").fading_period
     4
+    >>> from_name("cluster:4:0.5")
+    ClusterTopology(n_clusters=4, inter_weight=0.5)
     """
     head, _, arg = name.strip().lower().partition(":")
     if head in ("full", "full_mesh", "fullmesh", "mesh"):
@@ -955,6 +1268,14 @@ def from_name(name: str) -> Topology:
     if head in ("snr", "linkquality", "link_quality"):
         return LinkQualitySchedule(
             fading_period=int(arg) if arg else 8)
+    if head in ("cluster", "clusters", "hier", "hierarchical"):
+        if not arg:
+            raise ValueError(
+                "cluster topology needs a size: cluster:<n_clusters>[:alpha]")
+        g, _, alpha = arg.partition(":")
+        return ClusterTopology(n_clusters=int(g),
+                               inter_weight=float(alpha) if alpha else 0.3)
     raise ValueError(f"unknown topology {name!r} "
                      "(expected full | ring[:k] | random[:p] | partial:n | "
-                     "shift[:s] | rotate[:step] | alt[:k[:m]] | snr[:p])")
+                     "shift[:s] | cluster:g[:a] | rotate[:step] | "
+                     "alt[:k[:m]] | snr[:p])")

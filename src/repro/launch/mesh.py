@@ -62,3 +62,31 @@ def make_client_mesh(n_devices: int = 0):
             "set XLA_FLAGS=--xla_force_host_platform_device_count before "
             "launch to fan a CPU out into placeholder devices")
     return make_host_mesh((n,), ("data",))
+
+
+def make_cluster_mesh(n_clusters: int, n_devices: int = 0):
+    """2-D ``('pod', 'data')`` mesh with one pod row per cluster.
+
+    The hierarchical layout for ``topology.ClusterTopology``: clients
+    shard over BOTH axes (``client_axes=('pod', 'data')``), each cluster's
+    block lands on one pod row, so the in-cluster mean is an intra-pod
+    all-gather and only the narrow cluster-ring exchange crosses the
+    ``'pod'`` axis. Same placeholder-device trick as
+    :func:`make_client_mesh` on a CPU box.
+    """
+    import jax
+
+    g = int(n_clusters)
+    if g < 1:
+        raise ValueError(f"n_clusters={n_clusters} must be >= 1")
+    n = n_devices or len(jax.devices())
+    if len(jax.devices()) < n:
+        raise ValueError(
+            f"asked for {n} devices but only {len(jax.devices())} visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "launch to fan a CPU out into placeholder devices")
+    if n % g != 0:
+        raise ValueError(
+            f"{n} devices do not split into n_clusters={g} equal pod rows; "
+            "pick a device count divisible by the cluster count")
+    return make_host_mesh((g, n // g), ("pod", "data"))

@@ -30,7 +30,7 @@ import jax
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
 from repro.core import allocation, rounds, spectral, topology
 from repro.data.pipeline import CohortDataSource, FLDataSource, LMDataSource
-from repro.launch.mesh import make_client_mesh
+from repro.launch.mesh import make_client_mesh, make_cluster_mesh
 from repro.models import registry
 from repro.models.mlp import init_mlp, mlp_loss
 from repro.sharding import plans
@@ -70,14 +70,23 @@ def run_mlp(args) -> dict:
                        blade.dirichlet_alpha, seed=blade.seed)
     params = init_mlp(jax.random.fold_in(key, 1))
     log = MetricLogger(args.out_dir, "blade_mlp")
-    mesh = make_client_mesh(args.devices) if args.devices else None
+    # --clusters lays the mesh out hierarchically: one 'pod' row per
+    # cluster, clients sharded over BOTH axes, so ClusterTopology's
+    # in-cluster mean stays intra-pod and only the cluster ring crosses pods
+    if args.clusters:
+        mesh = make_cluster_mesh(args.clusters, args.devices)
+        plan = plans.scan_carry_plan(mesh, blade.n_clients,
+                                     client_axes=("pod", "data"))
+    else:
+        mesh = make_client_mesh(args.devices) if args.devices else None
+        plan = None
     run_key = jax.random.fold_in(key, 2)
     t0 = time.time()
     # static batch -> compiled scan engine (K rounds, one dispatch);
     # --devices shards the client axis of the whole scan over the mesh
     state, hist, ledger = rounds.run_blade_fl(
         mlp_loss, spec, params, src.static_batch(), run_key,
-        blade.K, mesh=mesh)
+        blade.K, mesh=mesh, plan=plan)
     # final eval on held-out data with the aggregated model
     from repro.core.aggregation import aggregate_once
     final = aggregate_once(state.params)
@@ -218,7 +227,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--topology", default="full",
                     help="Steps 2+5 mixing: full | ring[:k] | random[:p] | "
-                         "partial:n | shift[:s] (core/topology.py)")
+                         "partial:n | shift[:s] | cluster:g[:a] "
+                         "(core/topology.py)")
     ap.add_argument("--schedule", default=None,
                     help="time-varying topology schedule (overrides "
                          "--topology): rotate[:step] | alt[:k[:m]] | "
@@ -258,10 +268,22 @@ def main():
                     help="shard the client axis of the scan engine over this "
                          "many devices (0 = single-device; requires "
                          "clients %% devices == 0; see docs/architecture.md)")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="hierarchical two-level layout (mlp arch): a "
+                         "('pod', 'data') mesh with one pod row per cluster "
+                         "(launch/mesh.py make_cluster_mesh), clients "
+                         "sharded over both axes. Defaults --topology to "
+                         "cluster:<g> so the mix is the in-cluster mean + "
+                         "cluster-ring exchange")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args()
     if args.schedule:
         args.topology = args.schedule
+    if args.clusters:
+        if args.arch != "mlp" or args.enrolled > 0:
+            ap.error("--clusters hierarchical mode runs the mlp substrate")
+        if args.topology == "full" and not args.schedule:
+            args.topology = f"cluster:{args.clusters}"
     if args.enrolled > 0:
         if args.arch != "mlp":
             ap.error("--enrolled cohort mode runs the mlp substrate")

@@ -35,6 +35,46 @@ _TRAIN_TABLE = {
 _FSDP_SERVE_BYTES = 12e9
 
 
+def _client_axis_extents(mesh: Mesh, client_axes: Tuple[str, ...],
+                         what: str) -> Tuple[int, Tuple[int, ...]]:
+    """Shared ``client_axes`` validation for the carry-plan builders:
+    non-empty, no duplicates, every name on the mesh. Returns the shard
+    count with the per-axis extents so divisibility errors can spell out
+    the full axis product instead of surfacing as an opaque shard_map
+    size mismatch."""
+    if not client_axes:
+        raise ValueError(
+            f"client_axes must name at least one mesh axis (an empty tuple "
+            f"would replicate the {what} and silently run every client on "
+            "every shard)")
+    dupes = sorted({a for a in client_axes if client_axes.count(a) > 1})
+    if dupes:
+        raise ValueError(
+            f"client_axes {tuple(client_axes)} name mesh axes more than "
+            f"once ({', '.join(map(repr, dupes))}); each axis shards the "
+            "client dimension at most once")
+    for a in client_axes:
+        if a not in mesh.shape:
+            raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")
+    sizes = tuple(int(mesh.shape[a]) for a in client_axes)
+    n_shards = 1
+    for s in sizes:
+        n_shards *= s
+    return n_shards, sizes
+
+
+def _axis_product(client_axes: Tuple[str, ...],
+                  sizes: Tuple[int, ...]) -> str:
+    """``"8 (= pod:2 x data:4)"`` — the full axis-product for error text."""
+    n = 1
+    for s in sizes:
+        n *= s
+    if len(sizes) == 1:
+        return f"{n} ({client_axes[0]}:{sizes[0]})"
+    prod = " x ".join(f"{a}:{s}" for a, s in zip(client_axes, sizes))
+    return f"{n} (= {prod})"
+
+
 @dataclasses.dataclass(frozen=True)
 class ScanCarryPlan:
     """Layout of the K-round scan engine's carry on a client-sharded mesh.
@@ -52,10 +92,17 @@ class ScanCarryPlan:
     across all K rounds without ever leaving the devices.
 
     Frozen + hashable: the plan is part of the compiled-runner cache key.
+
+    ``axis_sizes`` carries the mesh's per-axis extents (aligned with
+    ``client_axes``) so ``topology.resolve_mix_plan`` can judge
+    cluster/halo alignment on compound ``('pod', 'data')`` axes without
+    holding a mesh reference; empty means "extents unknown, only
+    ``n_shards`` is attributed".
     """
     n_clients: int
     client_axes: Tuple[str, ...] = ("data",)
     n_shards: int = 1
+    axis_sizes: Tuple[int, ...] = ()
 
     @property
     def clients_per_shard(self) -> int:
@@ -82,24 +129,15 @@ def scan_carry_plan(mesh: Mesh, n_clients: int,
     the tolerance tier: the psum lowerings slice per-shard weight/column
     blocks by the same linearized shard index this layout defines, so they
     too require the uniform block size validated here)."""
-    from repro.sharding.specs import _extent
-
-    if not client_axes:
-        raise ValueError(
-            "client_axes must name at least one mesh axis (an empty tuple "
-            "would replicate the client axis and silently run every client "
-            "on every shard)")
-    for a in client_axes:
-        if a not in mesh.shape:
-            raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")
-    n_shards = _extent(mesh, tuple(client_axes))
+    client_axes = tuple(client_axes)
+    n_shards, sizes = _client_axis_extents(mesh, client_axes, "client axis")
     if n_clients % n_shards != 0:
         raise ValueError(
-            f"n_clients={n_clients} not divisible by the client-axis extent "
-            f"{n_shards} (mesh axes {client_axes}); pick C as a multiple of "
-            "the device count")
-    return ScanCarryPlan(n_clients=n_clients, client_axes=tuple(client_axes),
-                         n_shards=n_shards)
+            f"n_clients={n_clients} not divisible by the client-axis "
+            f"extent {_axis_product(client_axes, sizes)}; pick C as a "
+            "multiple of the device count")
+    return ScanCarryPlan(n_clients=n_clients, client_axes=client_axes,
+                         n_shards=n_shards, axis_sizes=sizes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +159,7 @@ class CohortCarryPlan:
     cohort_size: int
     client_axes: Tuple[str, ...] = ("data",)
     n_shards: int = 1
+    axis_sizes: Tuple[int, ...] = ()
 
     @property
     def clients_per_shard(self) -> int:
@@ -145,28 +184,20 @@ def cohort_carry_plan(mesh: Mesh, n_enrolled: int, cohort_size: int,
     enrolled population is host-side and never sharded, so ``n_enrolled``
     is unconstrained (and may be far larger than any device array could
     be)."""
-    from repro.sharding.specs import _extent
-
-    if not client_axes:
-        raise ValueError(
-            "client_axes must name at least one mesh axis (an empty tuple "
-            "would replicate the cohort and silently run every client on "
-            "every shard)")
-    for a in client_axes:
-        if a not in mesh.shape:
-            raise ValueError(f"mesh has no axis {a!r}: {dict(mesh.shape)}")
+    client_axes = tuple(client_axes)
+    n_shards, sizes = _client_axis_extents(mesh, client_axes, "cohort")
     if not 1 <= cohort_size <= n_enrolled:
         raise ValueError(
             f"cohort_size={cohort_size} must lie in "
             f"[1, n_enrolled={n_enrolled}]")
-    n_shards = _extent(mesh, tuple(client_axes))
     if cohort_size % n_shards != 0:
         raise ValueError(
             f"cohort_size={cohort_size} not divisible by the client-axis "
-            f"extent {n_shards} (mesh axes {client_axes}); pick A as a "
+            f"extent {_axis_product(client_axes, sizes)}; pick A as a "
             "multiple of the device count")
     return CohortCarryPlan(n_enrolled=n_enrolled, cohort_size=cohort_size,
-                           client_axes=tuple(client_axes), n_shards=n_shards)
+                           client_axes=client_axes, n_shards=n_shards,
+                           axis_sizes=sizes)
 
 
 def data_axes(multi_pod: bool) -> Tuple[str, ...]:

@@ -158,3 +158,94 @@ def test_sharded_scan_stacked_batches_subprocess():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res == {"plan_shards": 4, "params_bitwise": True,
                    "history_bitwise": True, "ledger_bitwise": True}
+
+
+@pytest.mark.slow
+def test_cluster_topology_sharded_bitwise_subprocess():
+    """ClusterTopology's two-level mix on a 2x4 ('pod', 'data') mesh —
+    in-pod all-gather mean + cross-pod cluster-ring ppermute — is bit-for-
+    bit the single-device kron(B, J/S) mix across the whole K-round scan:
+    params, every metric, and every ledger hash link.
+
+    C=16 keeps >=2 client rows per shard: a size-1 vmap block inside
+    value_and_grad fuses differently from the full-width program on CPU
+    builds and the materialized per-client loss (a metric dead-end — params
+    and digests are unaffected) drifts a ULP. The bitwise-metrics contract
+    holds for n_clients >= 2x the device count."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, math
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+        from repro.sharding import plans
+
+        C, K = 16, 3
+        key = jax.random.key(7)
+        src = FLDataSource(key, C, samples_per_client=32, seed=7)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
+        plan = plans.scan_carry_plan(mesh, C, client_axes=("pod", "data"))
+        rk = jax.random.fold_in(key, 2)
+
+        def eqf(a, b):
+            return a == b or (isinstance(a, float)
+                              and math.isnan(a) and math.isnan(b))
+
+        cases = [
+            # cluster-aligned: G == pod extent, in-pod mean + pod-ring halo
+            ("cluster_aligned", topology.ClusterTopology(n_clusters=2),
+             dict(n_lazy=1, sigma2=0.05)),
+            # unaligned G: gathered dense cluster math, still bitwise
+            ("cluster_unaligned",
+             topology.ClusterTopology(n_clusters=4, inter_weight=0.5), {}),
+            # weighted reroute: |D_i| weights send cluster through its
+            # dense kron matrix
+            ("cluster_weighted",
+             topology.ClusterTopology(n_clusters=2, inter_weight=0.4),
+             dict(data_weights=tuple(float(i + 1) for i in range(16)))),
+            # multi-axis linearized halo: ring window crosses the pod seam
+            ("ring2_multi_axis", topology.Ring(neighbors=2),
+             dict(n_lazy=1, sigma2=0.02)),
+            # shift past the one-block halo window on the compound axis
+            ("pair_shift_multi_axis", topology.PairShift(shift=5), {}),
+        ]
+        out = {}
+        for name, topo, extra in cases:
+            spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1,
+                                    mine_attempts=64, difficulty_bits=2,
+                                    topology=topo, **extra)
+            batch = src.static_batch()
+            st1, h1, l1 = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, rk, K)
+            st2, h2, l2 = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, rk, K, mesh=mesh, plan=plan)
+            out[name] = {
+                "params_bitwise": all(
+                    bool((np.asarray(a) == np.asarray(b)).all())
+                    for a, b in zip(jax.tree.leaves(st1.params),
+                                    jax.tree.leaves(st2.params))),
+                "history_bitwise": all(
+                    eqf(a[k], b[k]) for a, b in zip(h1, h2) for k in a),
+                "ledger_bitwise": [b.header_hash for b in l1.blocks]
+                    == [b.header_hash for b in l2.blocks],
+                "chain_valid": l2.validate_chain(),
+                "n_blocks": len(l2.blocks),
+            }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for name, r in res.items():
+        assert r["params_bitwise"], (name, r)
+        assert r["history_bitwise"], (name, r)
+        assert r["ledger_bitwise"], (name, r)
+        assert r["chain_valid"] and r["n_blocks"] == 3, (name, r)

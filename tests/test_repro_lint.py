@@ -75,6 +75,15 @@ FIXTURES = {
             out, metrics = runner(state, xs)
             return state, metrics  # <-- flagged: donated `state` read
         """,
+    "RL205": """
+        from repro.core import topology
+
+        def make_communicate(spec):
+            low = spec.topology.lowering(spec.n_clients)
+            if low.kind == topology.GATHER:  # <-- flagged
+                return "dense"
+            return "permute"
+        """,
     "RL301": """
         import jax.numpy as jnp
         from repro.core import aggregation

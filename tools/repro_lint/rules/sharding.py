@@ -118,3 +118,62 @@ def check_donated_carry_read(ctx):
                        "read afterwards — the buffer is dead; use the "
                        "returned state")
                 break
+
+
+# --------------------------------------------------------------------------
+# RL205
+
+_MIX_KIND_CONSTS = frozenset({"ALL_REDUCE", "NEIGHBOR_PERMUTE", "GATHER",
+                              "PSUM", "SEGMENT", "CLUSTER"})
+_MIX_KIND_STRINGS = frozenset({"all_reduce", "neighbor_permute", "gather",
+                               "psum", "segment", "cluster"})
+
+
+def _side_names(node):
+    if isinstance(node, ast.Tuple):
+        return [terminal_name(e) for e in node.elts]
+    return [terminal_name(node)]
+
+
+def _mix_kind_literal(node) -> bool:
+    if isinstance(node, ast.Constant):
+        return node.value in _MIX_KIND_STRINGS
+    if isinstance(node, ast.Tuple):
+        return any(isinstance(e, ast.Constant)
+                   and e.value in _MIX_KIND_STRINGS for e in node.elts)
+    return False
+
+
+@rule("RL205", "MixLowering kind dispatched outside core/topology.py "
+               "(resolve_mix_plan is the single decision surface)")
+def check_mix_kind_dispatch(ctx):
+    # core/topology.py's resolve_mix_plan is the ONE place allowed to look
+    # at lowering kinds; everything downstream switches on the resolved
+    # MixPlan.mode (the disjoint EXEC_* strings). Re-deriving a decision
+    # from a kind string elsewhere is exactly the dispatch drift the
+    # resolver refactor deleted.
+    if ctx.path.replace("\\", "/").endswith("core/topology.py"):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Compare):
+            sides = [node.left] + list(node.comparators)
+            if any(nm in _MIX_KIND_CONSTS
+                   for side in sides for nm in _side_names(side)):
+                yield (node.lineno,
+                       "comparison against a MixLowering kind constant — "
+                       "dispatch on the resolved MixPlan.mode from "
+                       "topology.resolve_mix_plan instead")
+                continue
+            if any("kind" in _side_names(side) for side in sides) \
+                    and any(_mix_kind_literal(s) for s in sides):
+                yield (node.lineno,
+                       "comparison of `.kind` against a MixLowering kind "
+                       "string — dispatch on the resolved MixPlan.mode "
+                       "from topology.resolve_mix_plan instead")
+        elif (isinstance(node, ast.Attribute) and node.attr == "kind"
+              and isinstance(node.value, ast.Call)
+              and terminal_name(node.value.func) == "lowering"):
+            yield (node.lineno,
+                   "`.lowering(...).kind` accessed outside the resolver — "
+                   "consume topology.resolve_mix_plan(spec).mode/kind "
+                   "instead of re-deriving the lowering")
