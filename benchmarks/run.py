@@ -19,8 +19,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (bench_cohort, bench_hierarchy, bench_kernels,  # noqa: E402
-                        bench_multidevice, bench_rounds, bench_schedules,
-                        bench_topology, paper_tables, roofline)
+                        bench_multidevice, bench_robust, bench_rounds,
+                        bench_schedules, bench_topology, paper_tables,
+                        roofline)
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                    "bench_results.json")
@@ -31,7 +32,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,table2,...,fig10,kernels,rounds,"
                          "topology,schedules,cohort,multidevice,hierarchy,"
-                         "roofline")
+                         "robust,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="mnist proxy only (skip fashion)")
     ap.add_argument("--seed", type=int, default=0)
@@ -78,6 +79,8 @@ def main() -> None:
         results["multidevice_rounds_per_s"] = bench_multidevice.bench()
     if only is None or "hierarchy" in only:
         results["hierarchy_flat_vs_cluster"] = bench_hierarchy.bench()
+    if only is None or "robust" in only:
+        results["robust_attack_defense"] = bench_robust.bench()
     if only is None or "roofline" in only:
         results["roofline_pod16x16"] = roofline.run("pod16x16")
         results["roofline_pod2x16x16"] = roofline.run("pod2x16x16")

@@ -1,0 +1,124 @@
+"""Byzantine attack vs robust aggregation, side by side.
+
+Three identical runs on a ring schedule — same data, same keys, only the
+adversary/defense axis changes:
+
+  1. clean baseline        linear ring mix, no attack
+  2. ALIE vs linear        3 colluding "a little is enough" attackers bias
+                           every coordinate of the mean from inside the
+                           honest variance envelope
+  3. ALIE vs trimmed mean  the same attack against RoundSpec.robust_agg =
+                           "trimmed:3" — the order statistic drops the
+                           colluding tail per coordinate
+
+Prints the per-round detection suspect mask (the colluding ALIE broadcasts
+are identical, so the plagiarism detector flags the cabal even though each
+broadcast individually evades the norm test) and the final held-out loss
+gap each configuration pays.
+
+  PYTHONPATH=src python examples/byzantine_defense.py --rounds 6
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import attacks, detection, rounds, topology
+from repro.core.aggregation import aggregate_once
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+def run(name, src, params, key, k_rounds, atk=None, robust=None,
+        n_clients=12, tau=2):
+    spec = rounds.RoundSpec(
+        n_clients=n_clients, tau=tau, eta=0.05, mine_attempts=64,
+        difficulty_bits=2, topology=topology.Ring(neighbors=2),
+        attack=atk, robust_agg=robust)
+    state, hist, ledger = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.static_batch(), key, k_rounds)
+    eval_loss, m = mlp_loss(aggregate_once(state.params), src.eval_data)
+    print(f"\n== {name} ==")
+    print(f"  mix: {rounds.LAST_DISPATCH['mix']} "
+          f"({rounds.LAST_DISPATCH['mix_mode']}), "
+          f"chain valid: {ledger.validate_chain()}")
+    for i, h in enumerate(hist):
+        print(f"  round {i}: global_loss={h['global_loss']:.4f} "
+              f"divergence={h['divergence']:.3e}")
+    print(f"  final eval_loss={float(eval_loss):.4f} "
+          f"accuracy={float(m['accuracy']):.3f}")
+    return state, float(eval_loss)
+
+
+def show_detection(src, params, key, atk, n_clients=12):
+    """One un-aggregated round under attack: what every client's detector
+    vote sees in the post-attack broadcast set (Step 2)."""
+    spec = rounds.RoundSpec(n_clients=n_clients, tau=2, eta=0.05,
+                            mine_attempts=64, difficulty_bits=2,
+                            topology=topology.Ring(neighbors=2), attack=atk)
+    local_train = jax.jit(rounds.make_local_train(mlp_loss, spec))
+    attack = rounds.make_attack(spec)
+    from repro.core.aggregation import replicate
+    p = replicate(params, n_clients)
+    p, _ = local_train(p, src.static_batch())
+    p, _ = attack(p, jax.random.key(99))
+    mask, _ = detection.detect_lazy_round(p, params)
+    met = detection.detection_metrics(mask, atk.n_attackers)
+    flags = "".join("X" if f else "." for f in np.asarray(mask))
+    print(f"\nper-client suspect mask (first {atk.n_attackers} are the "
+          f"cabal): [{flags}]")
+    how = ("colluding ALIE broadcasts are identical -> plagiarism test"
+           if isinstance(atk, attacks.ALIE) else "update-norm outlier test")
+    print(f"detection precision={met['precision']:.2f} "
+          f"recall={met['recall']:.2f} flagged={met['flagged']}  ({how})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--attackers", type=int, default=3)
+    ap.add_argument("--z", type=float, default=1.5)
+    ap.add_argument("--attack", default=None,
+                    help="override the ALIE default: signflip[:scale] | "
+                         "noise[:sigma2[:scale]] | alie[:z] | "
+                         "replace[:boost]")
+    args = ap.parse_args()
+
+    key = jax.random.key(0)
+    src = FLDataSource(key, args.clients, samples_per_client=64, seed=0)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    run_key = jax.random.fold_in(key, 2)
+    if args.attack:
+        atk = attacks.from_name(args.attack, args.attackers)
+    else:
+        atk = attacks.ALIE(n_attackers=args.attackers, z=args.z)
+    print(f"{args.clients} clients, {args.attackers} x "
+          f"{type(atk).__name__} attackers, ring(2) schedule, "
+          f"K={args.rounds}")
+
+    _, clean = run("clean baseline (linear ring)", src, params, run_key,
+                   args.rounds, n_clients=args.clients)
+    atk_name = type(atk).__name__
+    _, attacked = run(f"{atk_name} vs linear ring", src, params, run_key,
+                      args.rounds, atk=atk, n_clients=args.clients)
+    _, defended = run(f"{atk_name} vs trimmed:3", src, params, run_key,
+                      args.rounds, atk=atk, robust="trimmed:3",
+                      n_clients=args.clients)
+
+    show_detection(src, params, run_key, atk, args.clients)
+
+    print(f"\nfinal eval-loss gap vs clean: "
+          f"linear {attacked - clean:+.4f}, "
+          f"trimmed {defended - clean:+.4f}")
+    print("(try --attack signflip:8 to watch the linear gap explode while "
+          "trimmed stays pinned — benchmarks/bench_robust.py sweeps this "
+          "properly)")
+
+
+if __name__ == "__main__":
+    main()

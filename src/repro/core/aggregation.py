@@ -65,6 +65,18 @@ the bitwise engine's chain. That is the tolerance equivalence tier:
 ``tests/equivalence.py`` holds the assertion helpers,
 ``tests/test_fast_allreduce.py`` pins psum-vs-gather agreement, and
 docs/architecture.md §The tolerance tier documents the contract.
+
+Robust consensus reducers (``mix_median`` / ``mix_trimmed`` /
+``mix_geomedian``)
+------------------------------------------------------------------
+
+Byzantine-tolerant alternatives to the linear mix family, selected via
+``RoundSpec.robust_agg`` (docs/architecture.md §Robust aggregation):
+coordinate-wise median, coordinate-wise trimmed mean, and a
+fixed-iteration Weiszfeld geometric median — all vectorized inside the
+scan, all lowering onto the mesh as all-gather + replicated order
+statistics (robust reductions are not psum-associative, so they live in
+the tolerance tier; see the section comment at their definitions).
 """
 from __future__ import annotations
 
@@ -576,6 +588,149 @@ def mix_cluster(params, n_clusters: int, inter_weight: float,
         return jnp.broadcast_to(out[None], x.shape).astype(leaf.dtype)
 
     return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Robust consensus reducers (Byzantine-tolerant alternatives to the linear
+# mix; selected via RoundSpec.robust_agg -> topology.resolve_mix_plan)
+# ---------------------------------------------------------------------------
+#
+# Each reducer maps the broadcast set [C, ...] to ONE aggregate that every
+# client adopts (rank-1, like FullMesh) — a robust consensus primitive over
+# the full broadcast set, deliberately independent of the round's topology
+# matrix: a Byzantine row must be EXCLUDED per coordinate, not merely
+# down-weighted, and the per-coordinate order statistics that do that are
+# defined over the whole client axis. Breakdown points (max attackers
+# tolerated): median and the Weiszfeld geometric median ⌊(C-1)/2⌋,
+# trimmed(t) exactly t per tail — versus 0 for every linear mix, where one
+# sign-flipping client corrupts all C models (tests/test_robust_mix.py pins
+# both sides).
+#
+# Sharded, each lowers as all-gather + replicated per-coordinate order
+# statistics over the full client axis + keep-local-rows — robust
+# reductions are NOT psum-associative (a median of medians is not the
+# median), so there is no partial-sum fast path and the family lives under
+# the TOLERANCE equivalence tier (rtol ≈ 1e-5, tests/test_robust_mix.py)
+# rather than the bitwise contract: sort/selection networks and the
+# Weiszfeld reweighting are fusion-context-sensitive in ways the
+# barrier-pinned linear reductions are not, and pinning every comparator is
+# not worth freezing the implementation.
+
+
+def robust_median(full_tree):
+    """Coordinate-wise median over the leading client axis, broadcast back
+    to every client slot (rank-1 aggregate).
+
+    >>> import jax.numpy as jnp
+    >>> out = robust_median({"w": jnp.array([[0.0], [1.0], [100.0]])})
+    >>> [float(v) for v in out["w"].ravel()]
+    [1.0, 1.0, 1.0]
+    """
+
+    def one(leaf):
+        agg = jnp.median(leaf.astype(jnp.float32), axis=0)
+        return jnp.broadcast_to(agg, leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, full_tree)
+
+
+def robust_trimmed(full_tree, trim: int):
+    """Coordinate-wise trimmed mean: sort each coordinate over the client
+    axis, drop the ``trim`` smallest and ``trim`` largest values, average
+    the surviving ``C - 2*trim``. ``trim=0`` is the plain mean (up to fp32
+    association of the sorted sum — ULP-bound, tests/test_property.py).
+
+    >>> import jax.numpy as jnp
+    >>> out = robust_trimmed({"w": jnp.array([[0.0], [1.0], [2.0],
+    ...                                       [1000.0]])}, trim=1)
+    >>> [float(v) for v in out["w"].ravel()]
+    [1.5, 1.5, 1.5, 1.5]
+    """
+    t = int(trim)
+
+    def one(leaf):
+        c = leaf.shape[0]
+        if not 0 <= 2 * t < c:
+            raise ValueError(f"trim={t} must satisfy 2*trim < C={c}")
+        kept = jnp.sort(leaf.astype(jnp.float32), axis=0)[t:c - t]
+        agg = jnp.sum(kept, axis=0) / jnp.float32(c - 2 * t)
+        return jnp.broadcast_to(agg, leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, full_tree)
+
+
+def robust_geomedian(full_tree, n_iters: int = 8, eps: float = 1e-6):
+    """Geometric median of the flattened client models by Weiszfeld
+    iteration with a STATIC iteration count — a fixed ``fori_loop``, so the
+    reducer is jax-traceable and compiles into the scan with no per-round
+    retrace (no data-dependent convergence test; ``n_iters`` in the 5-10
+    range is ample at FL scales, and the eps floor guards the reweighting
+    when the iterate lands on a client point).
+
+    Unlike the coordinate-wise reducers this is a MODEL-space median: the
+    minimizer of ``sum_i ||x_i - y||_2`` over the concatenated leaves,
+    which no coordinate-wise attack can drag further than the honest
+    diameter while a majority of clients is honest (breakdown ⌊(C-1)/2⌋).
+    """
+    leaves, treedef = jax.tree.flatten(full_tree)
+    c = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.astype(jnp.float32).reshape(c, -1) for leaf in leaves], axis=1)
+
+    def body(_, y):
+        d = jnp.sqrt(jnp.sum((flat - y[None]) ** 2, axis=1))   # [C]
+        w = 1.0 / jnp.maximum(d, jnp.float32(eps))
+        w = w / jnp.sum(w)
+        return jnp.tensordot(w, flat, axes=(0, 0))
+
+    y = jax.lax.fori_loop(0, int(n_iters), body, jnp.mean(flat, axis=0))
+
+    out, offset = [], 0
+    for leaf in leaves:
+        size = 1
+        for d in leaf.shape[1:]:
+            size *= int(d)
+        agg = jax.lax.dynamic_slice_in_dim(y, offset, size, axis=0)
+        offset += size
+        out.append(jnp.broadcast_to(agg.reshape(leaf.shape[1:]),
+                                    leaf.shape).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _mix_robust(params, reduce_full, *, axis_name: AxisName, n_shards: int,
+                full):
+    """Shared mesh lowering of the robust family: gather the client axis
+    (reusing the communicate stage's ``full`` when it already gathered),
+    run the replicated full-width reducer, keep the local rows."""
+    if axis_name is None:
+        return reduce_full(params if full is None else full)
+    full = client_all_gather(params, axis_name) if full is None else full
+    return client_local_rows(reduce_full(full), axis_name, n_shards)
+
+
+def mix_median(params, *, axis_name: AxisName = None, n_shards: int = 1,
+               full=None):
+    """Coordinate-wise-median mix (see :func:`robust_median`). Tolerance
+    tier on the mesh — see the section comment above."""
+    return _mix_robust(params, robust_median, axis_name=axis_name,
+                       n_shards=n_shards, full=full)
+
+
+def mix_trimmed(params, trim: int, *, axis_name: AxisName = None,
+                n_shards: int = 1, full=None):
+    """Trimmed-mean mix (see :func:`robust_trimmed`). Tolerance tier on the
+    mesh — see the section comment above."""
+    return _mix_robust(params, lambda t: robust_trimmed(t, trim),
+                       axis_name=axis_name, n_shards=n_shards, full=full)
+
+
+def mix_geomedian(params, n_iters: int = 8, *, eps: float = 1e-6,
+                  axis_name: AxisName = None, n_shards: int = 1, full=None):
+    """Weiszfeld geometric-median mix (see :func:`robust_geomedian`).
+    Tolerance tier on the mesh — see the section comment above."""
+    return _mix_robust(params,
+                       lambda t: robust_geomedian(t, n_iters, eps=eps),
+                       axis_name=axis_name, n_shards=n_shards, full=full)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,192 @@
+"""Byzantine attack stages (beyond-paper: the §5 lazy-client model is the
+mildest point on the adversarial spectrum; arXiv:2012.02044 and the
+blockchained-FL survey arXiv:2110.02182 frame Byzantine updates + robust
+aggregation as the defining robustness axis for decentralized FL).
+
+An :class:`Attack` is a pure keyed transform on the pre-broadcast params —
+the full ``[C, ...]`` client-stacked tree every client is about to publish
+to the chain. The adversary controls the first ``n_attackers`` clients
+(same first-M convention as ``core/lazy.py``), is omniscient (it sees every
+honest broadcast before choosing its own, the strongest standard threat
+model), and replaces only its own rows. Honest rows pass through bitwise
+untouched, so ``n_attackers == 0`` degenerates to the identity and the
+baseline results are unchanged.
+
+Shipped attacks (each a frozen dataclass, hashable so it can live on the
+hashable ``RoundSpec``):
+
+  :class:`SignFlip`          broadcast ``-scale * w_i`` — the classic
+                             direction-reversing Byzantine update.
+  :class:`ScaledNoise`       broadcast ``scale * w_i + N(0, sigma2)`` —
+                             keyed Gaussian garbage, the only stochastic
+                             attack (draws fold from the round's attack
+                             key, identical on every shard).
+  :class:`ALIE`              "A Little Is Enough": broadcast
+                             ``mu_honest - z * sd_honest`` per coordinate —
+                             stays inside the honest variance envelope, so
+                             it evades norm/distance outlier detection
+                             while still biasing the mean.
+  :class:`ModelReplacement`  deviation boosting ``mu + boost*(w_i - mu)``
+                             (boost defaults to C): under the linear mean a
+                             single attacker substitutes its own model for
+                             the aggregate, the backdoor-insertion scaling.
+
+``rounds.make_attack`` composes the selected attack into the round as a
+stage right after ``perturb``: sharded it all-gathers the client axis (or
+reuses the perturb stage's gather), applies the IDENTICAL full-``[C, ...]``
+transform, and slices the local rows back out — the same discipline that
+keeps the sharded engine bitwise with the single-device scan. The digest /
+detection / mix all run on the post-attack broadcast set, exactly what a
+real adversary publishes to the chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    """Base: which clients the adversary controls. Subclasses implement
+    ``apply(full, key, n_clients) -> full`` on the gathered broadcast set."""
+    n_attackers: int = 1
+
+    @property
+    def active(self) -> bool:
+        return self.n_attackers > 0
+
+    def _validate(self, n_clients: int) -> None:
+        if not 0 <= self.n_attackers < n_clients:
+            raise ValueError(
+                f"n_attackers={self.n_attackers} must leave at least one "
+                f"honest client (n_clients={n_clients})")
+
+    def _mask(self, n_clients: int, leaf) -> jnp.ndarray:
+        sel = jnp.arange(n_clients) < self.n_attackers
+        return sel.reshape((n_clients,) + (1,) * (leaf.ndim - 1))
+
+    def apply(self, full, key, n_clients: int):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SignFlip(Attack):
+    """Attacker ``i`` broadcasts ``-scale * w_i``."""
+    scale: float = 1.0
+
+    def apply(self, full, key, n_clients: int):
+        self._validate(n_clients)
+
+        def one(leaf):
+            flipped = (-jnp.float32(self.scale)
+                       * leaf.astype(jnp.float32)).astype(leaf.dtype)
+            return jnp.where(self._mask(n_clients, leaf), flipped, leaf)
+
+        return jax.tree.map(one, full)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledNoise(Attack):
+    """Attacker ``i`` broadcasts ``scale * w_i + N(0, sigma2)``. The noise
+    draws fold from the round's attack key with the same per-leaf split as
+    ``lazy.apply_lazy`` — full-``[C, ...]`` shapes, so the sharded and
+    single-device engines draw bitwise-identical noise."""
+    scale: float = 1.0
+    sigma2: float = 1.0
+
+    def apply(self, full, key, n_clients: int):
+        self._validate(n_clients)
+        std = float(self.sigma2) ** 0.5
+        leaves, treedef = jax.tree.flatten(full)
+        keys = jax.random.split(key, len(leaves))
+
+        def one(leaf, k):
+            bad = jnp.float32(self.scale) * leaf.astype(jnp.float32)
+            if std > 0.0:
+                bad = bad + jax.random.normal(k, leaf.shape,
+                                              jnp.float32) * std
+            return jnp.where(self._mask(n_clients, leaf),
+                             bad.astype(leaf.dtype), leaf)
+
+        return jax.tree.unflatten(
+            treedef, [one(leaf, k) for leaf, k in zip(leaves, keys)])
+
+
+@dataclasses.dataclass(frozen=True)
+class ALIE(Attack):
+    """"A Little Is Enough" (Baruch et al.): every attacker broadcasts the
+    per-coordinate ``mu_honest - z * sd_honest`` — inside the honest
+    variance envelope (undetectable by distance/norm outlier tests for
+    moderate ``z``) yet biasing every coordinate of the linear mean by
+    ``(m/C) * z * sd``. Omniscient: the honest statistics are computed from
+    the honest rows of the very broadcast set being attacked."""
+    z: float = 1.5
+
+    def apply(self, full, key, n_clients: int):
+        self._validate(n_clients)
+        m = self.n_attackers
+
+        def one(leaf):
+            honest = leaf[m:].astype(jnp.float32)       # static slice
+            mu = jnp.mean(honest, axis=0)
+            sd = jnp.std(honest, axis=0)
+            bad = jnp.broadcast_to(mu - jnp.float32(self.z) * sd, leaf.shape)
+            return jnp.where(self._mask(n_clients, leaf),
+                             bad.astype(leaf.dtype), leaf)
+
+        return jax.tree.map(one, full)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelReplacement(Attack):
+    """Deviation boosting / model replacement: attacker ``i`` broadcasts
+    ``mu_all + boost * (w_i - mu_all)``. With the default ``boost = C`` a
+    single attacker makes the linear mean land (approximately) on its own
+    model — the classic backdoor-insertion scaling."""
+    boost: float = 0.0   # 0.0 -> n_clients at apply time
+
+    def apply(self, full, key, n_clients: int):
+        self._validate(n_clients)
+        boost = float(self.boost) if self.boost else float(n_clients)
+
+        def one(leaf):
+            f32 = leaf.astype(jnp.float32)
+            mu = jnp.mean(f32, axis=0)
+            bad = mu + jnp.float32(boost) * (f32 - mu)
+            return jnp.where(self._mask(n_clients, leaf),
+                             bad.astype(leaf.dtype), leaf)
+
+        return jax.tree.map(one, full)
+
+
+def from_name(name: str, n_attackers: int = 1) -> Attack:
+    """Parse a CLI-friendly attack spec (``launch/train --attack``).
+
+    ``signflip[:scale]`` | ``noise[:sigma2[:scale]]`` | ``alie[:z]`` |
+    ``replace[:boost]`` — e.g. ``signflip:2``, ``noise:0.5``, ``alie:1.2``.
+
+    >>> from_name("signflip", 2)
+    SignFlip(n_attackers=2, scale=1.0)
+    >>> from_name("alie:1.2").z
+    1.2
+    >>> from_name("replace").boost
+    0.0
+    """
+    head, _, arg = name.strip().lower().partition(":")
+    m = int(n_attackers)
+    if head in ("signflip", "sign_flip", "sign"):
+        return SignFlip(n_attackers=m, scale=float(arg) if arg else 1.0)
+    if head in ("noise", "scalednoise", "scaled_noise", "gauss"):
+        sigma2, _, scale = arg.partition(":")
+        return ScaledNoise(n_attackers=m,
+                           sigma2=float(sigma2) if sigma2 else 1.0,
+                           scale=float(scale) if scale else 1.0)
+    if head == "alie":
+        return ALIE(n_attackers=m, z=float(arg) if arg else 1.5)
+    if head in ("replace", "replacement", "model_replacement", "boost"):
+        return ModelReplacement(n_attackers=m,
+                                boost=float(arg) if arg else 0.0)
+    raise ValueError(f"unknown attack {name!r} (expected signflip[:scale] | "
+                     "noise[:sigma2[:scale]] | alie[:z] | replace[:boost])")

@@ -93,16 +93,26 @@ def detect_lazy_round(params, params_ref, *, threshold_frac: float = 0.2,
 
 
 def detection_metrics(suspect_mask: jnp.ndarray, n_lazy: int) -> dict:
-    """Precision/recall against the ground-truth lazy set (first M clients;
-    note the plagiarism SOURCE is also near its copy, so flagged honest
-    sources count against precision — reported, not hidden)."""
+    """Precision/recall against the ground-truth adversarial set (first M
+    clients — the shared convention of ``core/lazy.py`` and
+    ``core/attacks.py``; note the plagiarism SOURCE is also near its copy,
+    so flagged honest sources count against precision — reported, not
+    hidden).
+
+    Empty edges use the vacuous-truth convention instead of the old
+    guarded-denominator 0.0 (which read as "detector failed" on a clean
+    run it handled perfectly): with nothing flagged precision is 1.0, and
+    with ``n_lazy == 0`` recall is 1.0 — so a detector that stays quiet on
+    an attack-free round scores a perfect (1.0, 1.0), never a
+    divide-by-zero artifact (regression-tested in tests/test_lazy_dp.py).
+    """
     c = suspect_mask.shape[0]
     truth = jnp.arange(c) < n_lazy
-    tp = jnp.sum(suspect_mask & truth)
-    fp = jnp.sum(suspect_mask & ~truth)
-    fn = jnp.sum(~suspect_mask & truth)
+    tp = int(jnp.sum(suspect_mask & truth))
+    fp = int(jnp.sum(suspect_mask & ~truth))
+    fn = int(jnp.sum(~suspect_mask & truth))
     return {
-        "precision": float(tp / jnp.maximum(tp + fp, 1)),
-        "recall": float(tp / jnp.maximum(tp + fn, 1)),
-        "flagged": int(jnp.sum(suspect_mask)),
+        "precision": tp / (tp + fp) if tp + fp else 1.0,
+        "recall": tp / (tp + fn) if tp + fn else 1.0,
+        "flagged": tp + fp,
     }

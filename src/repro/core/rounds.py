@@ -117,8 +117,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import (aggregation, chain, detection, dp as dp_lib,
-                        lazy as lazy_lib, mining, topology as topology_lib)
+from repro.core import (aggregation, attacks as attacks_lib, chain,
+                        detection, dp as dp_lib, lazy as lazy_lib, mining,
+                        topology as topology_lib)
 from repro.sharding import plans as plans_lib
 
 LossFn = Callable[[Any, Any], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
@@ -201,6 +202,24 @@ class RoundSpec:
     #     deterministically, like fast_allreduce.
     #   False — never, even for ExplicitSparse (its small-C dense fallback).
     sparse_mix: Optional[bool] = None
+    # Byzantine attack stage (core/attacks.py; CLI --attack/--attackers):
+    # a pure keyed transform on the pre-broadcast params — the adversary's
+    # first-M clients replace their broadcasts (sign-flip, scaled noise,
+    # ALIE, model replacement) right after the perturb stage, so the
+    # digest / detection / mix all see what a real adversary publishes.
+    # None (no attack) is the exact baseline computation.
+    attack: Optional[attacks_lib.Attack] = None
+    # Byzantine-robust aggregation (docs/architecture.md §Robust
+    # aggregation; CLI --robust): override the topology's linear mix with a
+    # robust consensus reducer over the full broadcast set — "median" |
+    # "trimmed[:t]" | "geomed[:iters]" (topology.parse_robust; "mean"/None
+    # keep the linear mix). Breakdown point ⌊(C-1)/2⌋ for median/geomed, t
+    # per tail for trimmed — versus 0 for every linear mix. Robust
+    # reductions are not psum-associative, so sharded execution agrees with
+    # single-device to the TOLERANCE tier (rtol ≈ 1e-5), not bitwise, and
+    # the linear-only flags (fast_allreduce / fused_mix / sparse_mix=True /
+    # data_weights) are rejected by the resolver.
+    robust_agg: Optional[str] = None
 
 
 class RoundState(NamedTuple):
@@ -342,6 +361,44 @@ def make_perturb(spec: RoundSpec, axis_name=None, n_shards: int = 1):
         return aggregation.client_local_rows(full, axis_name, n_shards), full
 
     return perturb
+
+
+# fold_in salt deriving the attack key from k_dp — its own stream (disjoint
+# from _TOPOLOGY_SALT) so adding an attack never perturbs the lazy/DP/
+# topology draws, and an attack-free spec is the exact baseline.
+_ATTACK_SALT = 0x6174746B  # "attk"
+
+
+def make_attack(spec: RoundSpec, axis_name=None, n_shards: int = 1):
+    """Byzantine attack stage factory (core/attacks.py), composed right
+    after ``perturb``: what the adversary's first-M clients broadcast
+    instead of their (possibly lazy/DP-perturbed) models.
+
+    Returns ``attack(params, k_dp, full=None) -> (params, full)`` with the
+    same gather discipline as ``make_perturb``: sharded, it all-gathers the
+    client axis — or reuses the perturb stage's ``full`` tree when that
+    stage already gathered — applies the IDENTICAL full-``[C, ...]`` keyed
+    transform (``Attack.apply``; the attack key folds from ``k_dp`` with
+    :data:`_ATTACK_SALT`, so the draws match bitwise across engines), and
+    slices the local rows back out. The transformed ``full`` is returned so
+    the communicate stage's digest / detection / mix see the post-attack
+    broadcast set without re-gathering. ``spec.attack=None`` (or zero
+    attackers) is the identity and adds nothing to the trace."""
+    atk = spec.attack
+    active = atk is not None and atk.active
+    if active:
+        atk._validate(spec.n_clients)   # fail at build time, not in-trace
+
+    def attack(params, k_dp, full=None):
+        if not active:
+            return params, full
+        if full is None:
+            full = aggregation.client_all_gather(params, axis_name)
+        k_att = jax.random.fold_in(k_dp, _ATTACK_SALT)
+        full = atk.apply(full, k_att, spec.n_clients)
+        return aggregation.client_local_rows(full, axis_name, n_shards), full
+
+    return attack
 
 
 # Back-compat alias: the auto sparse-mix crossover now lives with the rest
@@ -535,6 +592,17 @@ def make_communicate(spec: RoundSpec, axis_name=None, n_shards: int = 1,
         elif mode == topology_lib.EXEC_SHIFT_HALO:
             params = aggregation.mix_shift_halo(params, plan.offsets,
                                                 plan.weight, axis_name)
+        elif mode == topology_lib.EXEC_MEDIAN:
+            params = aggregation.mix_median(params, axis_name=axis_name,
+                                            n_shards=n_shards, full=full)
+        elif mode == topology_lib.EXEC_TRIMMED:
+            params = aggregation.mix_trimmed(params, plan.trim,
+                                             axis_name=axis_name,
+                                             n_shards=n_shards, full=full)
+        elif mode == topology_lib.EXEC_GEOMED:
+            params = aggregation.mix_geomedian(params, plan.robust_iters,
+                                               axis_name=axis_name,
+                                               n_shards=n_shards, full=full)
         else:
             w = topo.matrix(spec.n_clients, key=k_topo, round_idx=round_idx)
             params = aggregation.mix_gather(params, w, weights,
@@ -671,8 +739,9 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
     """Build the jittable round function: (RoundState, batch) -> (RoundState, metrics).
 
     ``batch`` leaves have leading client axis [C, local_batch, ...]. The
-    round is the composition of the five stage factories above; swap a stage
-    to express a new scenario.
+    round is the composition of the stage factories above (local_train,
+    perturb, the optional Byzantine attack stage, communicate, mine,
+    finalize); swap a stage to express a new scenario.
 
     With ``axis_name`` set (a mesh axis name or tuple of names) the round
     body is written for ``shard_map``: the leading axis of params/batch is
@@ -686,6 +755,7 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
     ``n_shards`` is attributed."""
     local_train = make_local_train(loss_fn, spec, n_shards)
     perturb = make_perturb(spec, axis_name, n_shards)
+    attack = make_attack(spec, axis_name, n_shards)
     communicate = make_communicate(spec, axis_name, n_shards,
                                    axis_sizes=axis_sizes)
     mine = make_mine(spec, axis_name, n_shards)
@@ -698,6 +768,7 @@ def make_integrated_round(loss_fn: LossFn, spec: RoundSpec, axis_name=None,
 
         params, local_losses = local_train(state.params, batch)
         params, broadcast_full = perturb(params, k_lazy, k_dp)
+        params, broadcast_full = attack(params, k_dp, full=broadcast_full)
         params, digest, divergence, extra = communicate(
             params, state.params, k_topo, state.round_idx,
             full=broadcast_full)
@@ -758,8 +829,9 @@ def dispatch_plan(spec: RoundSpec, batches, n_rounds: int, *,
         diagnostics, tolerance tier) when ``spec.fused_mix``;
         ``"segment"`` when the resolver reroutes the mix through the
         sparse gather + ``segment_sum`` path (ExplicitSparse topologies,
-        low-degree GATHER mixes, or ``spec.sparse_mix=True``); else
-        ``"jnp"``.
+        low-degree GATHER mixes, or ``spec.sparse_mix=True``);
+        ``"robust"`` when ``spec.robust_agg`` overrides the linear mix
+        with a Byzantine-robust consensus reducer; else ``"jnp"``.
       ``mix_mode`` — the resolved ``MixPlan.mode`` executor strategy
         (``topology.EXEC_*``). Reported from the SAME
         :func:`topology.resolve_mix_plan` call ``make_communicate``

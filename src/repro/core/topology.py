@@ -100,6 +100,15 @@ SEGMENT = "segment"
 # the in-cluster reduce stays inside a pod and only the two neighbor
 # cluster means cross pods. Bitwise (fixed-order combine), unlike PSUM.
 CLUSTER = "cluster"
+# Byzantine-robust kind: the spec's ``robust_agg`` overrides the topology's
+# advertised lowering with a robust consensus reducer over the FULL
+# broadcast set (``aggregation.mix_median`` / ``mix_trimmed`` /
+# ``mix_geomedian``) — per-coordinate order statistics are defined over the
+# whole client axis, so the topology matrix is not consulted. Lowers as
+# all-gather + replicated order statistics; robust reductions are not
+# psum-associative, so the kind lives under the TOLERANCE equivalence tier
+# (docs/architecture.md §Robust aggregation).
+ROBUST = "robust"
 
 # Executor strategies a resolved :class:`MixPlan` selects for the
 # communicate stage. Deliberately DISJOINT from the MixLowering kind
@@ -115,6 +124,9 @@ EXEC_HALO = "exec_halo"                # aggregation.mix_neighbor_halo
 EXEC_SHIFT_HALO = "exec_shift_halo"    # aggregation.mix_shift_halo
 EXEC_CLUSTER = "exec_cluster"          # aggregation.mix_cluster
 EXEC_GATHER = "exec_gather"            # aggregation.mix_gather (needs W)
+EXEC_MEDIAN = "exec_median"            # aggregation.mix_median (tolerance)
+EXEC_TRIMMED = "exec_trimmed"          # aggregation.mix_trimmed (tol.)
+EXEC_GEOMED = "exec_geomed"            # aggregation.mix_geomedian (tol.)
 
 # Auto sparse-mix crossover: reroute a GATHER mix through segment_sum only
 # when the padded max degree is ≪ C — degree * 8 <= C keeps every shipped
@@ -187,7 +199,7 @@ class MixPlan:
     """
     mode: str                   # EXEC_* executor strategy
     kind: str                   # MixLowering kind after reroutes
-    mix: str                    # dispatch tier: "fused" | "segment" | "jnp"
+    mix: str            # dispatch tier: "fused" | "segment" | "robust" | "jnp"
     offsets: Tuple[int, ...] = ()
     weight: float = 0.0
     offsets_table: Tuple[Tuple[int, ...], ...] = ()
@@ -198,6 +210,8 @@ class MixPlan:
     needs_matrix: bool = False  # executor must trace topo.matrix(...)
     n_clusters: int = 0         # EXEC_CLUSTER: G
     inter_weight: float = 0.0   # EXEC_CLUSTER: alpha
+    trim: int = 0               # EXEC_TRIMMED: per-tail trim count
+    robust_iters: int = 0       # EXEC_GEOMED: static Weiszfeld iterations
     # eq=False (identity hash): a plan is never a static-arg/lru key, so
     # the unhashable-frozen-dataclass concern behind RL102 does not apply
     # repro-lint: disable=RL102
@@ -205,6 +219,76 @@ class MixPlan:
     # repro-lint: disable=RL102
     psum_row: Optional[np.ndarray] = None   # EXEC_PSUM per-client weighting
     sparse: Optional["SparseLowering"] = None   # EXEC_SEGMENT edge lists
+
+
+# Default Weiszfeld iteration count for robust_agg="geomed" (static — it
+# compiles into the scan; 8 is ample at FL client counts, see
+# aggregation.robust_geomedian).
+GEOMED_DEFAULT_ITERS = 8
+
+
+def parse_robust(name: str, n_clients: int) -> Tuple[str, int, int]:
+    """Parse a ``RoundSpec.robust_agg`` spec into ``(mode, trim, iters)``.
+
+    ``median`` | ``trimmed[:t]`` (default ``t=1``; needs ``2t < C``) |
+    ``geomed[:iters]`` (default 8 Weiszfeld iterations). ``mean`` is
+    accepted as the explicit linear baseline and handled by the caller
+    (falls through to the normal topology resolution).
+
+    >>> parse_robust("median", 8)
+    ('exec_median', 0, 0)
+    >>> parse_robust("trimmed:2", 8)
+    ('exec_trimmed', 2, 0)
+    >>> parse_robust("geomed", 8)
+    ('exec_geomed', 0, 8)
+    """
+    head, _, arg = name.strip().lower().partition(":")
+    if head == "median":
+        return EXEC_MEDIAN, 0, 0
+    if head in ("trimmed", "trim", "trimmed_mean"):
+        t = int(arg) if arg else 1
+        if not 0 <= 2 * t < n_clients:
+            raise ValueError(
+                f"robust_agg={name!r}: trim={t} must satisfy "
+                f"2*trim < n_clients={n_clients}")
+        return EXEC_TRIMMED, t, 0
+    if head in ("geomed", "geomedian", "geometric_median"):
+        iters = int(arg) if arg else GEOMED_DEFAULT_ITERS
+        if iters < 1:
+            raise ValueError(f"robust_agg={name!r}: needs >= 1 Weiszfeld "
+                             "iteration")
+        return EXEC_GEOMED, 0, iters
+    raise ValueError(f"unknown robust_agg {name!r} (expected mean | median "
+                     "| trimmed[:t] | geomed[:iters])")
+
+
+def _resolve_robust(spec, c: int, n_shards: int) -> "MixPlan | None":
+    """The ROBUST-kind plan when ``spec.robust_agg`` selects one, else None.
+
+    Robust consensus preempts the whole linear decision ladder, and the
+    flags that only make sense for linear mixes are rejected loudly rather
+    than silently ignored: the psum/fused tiers reassociate a LINEAR
+    reduction that no longer exists, a sparse edge list cannot express
+    per-coordinate order statistics, and |D_i| row weights have no
+    agreed-upon robust semantics (a weighted median would change the
+    breakdown point)."""
+    robust = getattr(spec, "robust_agg", None)
+    if robust in (None, "mean"):
+        return None
+    mode, trim, iters = parse_robust(robust, c)
+    conflicts = [flag for flag, on in (
+        ("fast_allreduce", spec.fast_allreduce),
+        ("fused_mix", spec.fused_mix),
+        ("sparse_mix=True", spec.sparse_mix is True),
+        ("data_weights", spec.data_weights is not None)) if on]
+    if conflicts:
+        raise ValueError(
+            f"robust_agg={robust!r} is incompatible with "
+            f"{', '.join(conflicts)}: robust reducers are order statistics "
+            "over the full broadcast set — no psum/fused linear fast path, "
+            "no sparse edge-list form, no |D_i| row reweighting")
+    return MixPlan(mode=mode, kind=ROBUST, mix="robust",
+                   n_shards=n_shards, trim=trim, robust_iters=iters)
 
 
 def _resolve_sparse(spec, topo, kind) -> "SparseLowering | None":
@@ -240,7 +324,7 @@ def resolve_mix_plan(spec, mesh_axes=None) -> MixPlan:
 
     ``spec`` is duck-typed (``rounds.RoundSpec`` in practice): the resolver
     reads ``topology``, ``n_clients``, ``data_weights``, ``fast_allreduce``,
-    ``fused_mix`` and ``sparse_mix``. ``mesh_axes`` is ``None`` for
+    ``fused_mix``, ``sparse_mix`` and (optionally) ``robust_agg``. ``mesh_axes`` is ``None`` for
     single-device execution or a tuple of ``(axis_name, extent)`` pairs for
     the client-sharded mesh — only the extent product (the shard count,
     which bounds the one-block halo window) feeds the decision; per-axis
@@ -259,7 +343,11 @@ def resolve_mix_plan(spec, mesh_axes=None) -> MixPlan:
       * halo feasibility: NEIGHBOR_PERMUTE offsets inside one shard block
         run the two-permute halo (EXEC_HALO), anything else the whole-block
         shift form (EXEC_SHIFT_HALO) — both linearize multi-axis meshes, so
-        there is no gather fallback for permute kinds anymore.
+        there is no gather fallback for permute kinds anymore;
+      * the Byzantine-robust override (``robust_agg`` — median / trimmed /
+        geomed): preempts everything above, rejects the linear-only flags,
+        and routes to the ROBUST kind's EXEC_MEDIAN / EXEC_TRIMMED /
+        EXEC_GEOMED executor modes (tolerance tier).
 
     >>> from types import SimpleNamespace
     >>> def _spec(topo, **kw):
@@ -280,6 +368,9 @@ def resolve_mix_plan(spec, mesh_axes=None) -> MixPlan:
     'exec_cluster'
     >>> resolve_mix_plan(_spec(RandomGraph(p_link=0.5))).needs_matrix
     True
+    >>> resolve_mix_plan(_spec(Ring(neighbors=1),
+    ...                        robust_agg="trimmed:2")).mode
+    'exec_trimmed'
     """
     topo = spec.topology
     c = spec.n_clients
@@ -287,6 +378,14 @@ def resolve_mix_plan(spec, mesh_axes=None) -> MixPlan:
     for _, extent in (mesh_axes or ()):
         n_shards *= max(int(extent), 1)
     n_local = c // n_shards
+
+    # Byzantine-robust consensus (spec.robust_agg, duck-typed optional so
+    # pre-existing SimpleNamespace specs resolve unchanged) preempts the
+    # linear ladder below entirely — the reducer is defined over the full
+    # broadcast set and never consults the topology matrix.
+    robust_plan = _resolve_robust(spec, c, n_shards)
+    if robust_plan is not None:
+        return robust_plan
 
     low = topo.lowering(c, fast_allreduce=spec.fast_allreduce)
     kind = low.kind

@@ -28,7 +28,7 @@ import time
 import jax
 
 from repro.configs import BladeConfig, ShapeConfig, get_smoke_arch
-from repro.core import allocation, rounds, spectral, topology
+from repro.core import allocation, attacks, rounds, spectral, topology
 from repro.data.pipeline import CohortDataSource, FLDataSource, LMDataSource
 from repro.launch.mesh import make_client_mesh, make_cluster_mesh
 from repro.models import registry
@@ -51,6 +51,21 @@ def spectral_fields(spec: rounds.RoundSpec, run_key, n_rounds: int) -> dict:
             "predicted_consensus_rate": rep["predicted_consensus_rate"]}
 
 
+def adversary_fields(args) -> dict:
+    """``RoundSpec`` kwargs for the Byzantine scenario axis: ``--attack``
+    (parsed by ``attacks.from_name`` with ``--attackers`` adversarial
+    clients) and ``--robust`` (the aggregator override string the resolver
+    parses; ``mean`` keeps the linear mix). Shared by every run path so the
+    flags mean the same thing at paper scale, cohort scale and arch
+    scale."""
+    out = {}
+    if args.attack:
+        out["attack"] = attacks.from_name(args.attack, args.attackers)
+    if args.robust:
+        out["robust_agg"] = args.robust
+    return out
+
+
 def run_mlp(args) -> dict:
     blade = BladeConfig(n_clients=args.clients, n_lazy=args.lazy,
                         sigma2=args.sigma2, t_sum=args.t_sum,
@@ -64,7 +79,7 @@ def run_mlp(args) -> dict:
         difficulty_bits=4, eval_every=args.eval_every,
         topology=topology.from_name(args.topology),
         fast_allreduce=args.fast_allreduce, use_kernel=args.kernels,
-        fused_mix=args.fused_mix)
+        fused_mix=args.fused_mix, **adversary_fields(args))
     key = jax.random.key(blade.seed)
     src = FLDataSource(key, blade.n_clients, blade.samples_per_client,
                        blade.dirichlet_alpha, seed=blade.seed)
@@ -128,7 +143,7 @@ def run_cohort(args) -> dict:
         difficulty_bits=4, eval_every=args.eval_every,
         topology=topology.from_name(args.topology),
         fast_allreduce=args.fast_allreduce, use_kernel=args.kernels,
-        fused_mix=args.fused_mix)
+        fused_mix=args.fused_mix, **adversary_fields(args))
     key = jax.random.key(blade.seed)
     src = CohortDataSource(key, blade.samples_per_client,
                            blade.dirichlet_alpha)
@@ -178,7 +193,8 @@ def run_arch_smoke(args) -> dict:
                             topology=topology.from_name(args.topology),
                             fast_allreduce=args.fast_allreduce,
                             use_kernel=args.kernels,
-                            fused_mix=args.fused_mix)
+                            fused_mix=args.fused_mix,
+                            **adversary_fields(args))
     src = LMDataSource(cfg, shape, args.clients, seed=args.seed)
     key = jax.random.key(args.seed)
     params = registry.init_model(key, cfg)
@@ -246,6 +262,20 @@ def main():
                          "| prefix (core/topology.py CohortSchedule)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="global-loss eval stride (NaN on skipped rounds)")
+    ap.add_argument("--attack", default=None,
+                    help="Byzantine attack stage on the pre-broadcast "
+                         "params: signflip[:scale] | noise[:sigma2[:scale]] "
+                         "| alie[:z] | replace[:boost] (core/attacks.py); "
+                         "the first --attackers clients are adversarial")
+    ap.add_argument("--attackers", type=int, default=1,
+                    help="adversarial client count for --attack (first-M "
+                         "convention, like --lazy)")
+    ap.add_argument("--robust", default=None,
+                    help="Byzantine-robust aggregation override: mean | "
+                         "median | trimmed[:t] | geomed[:iters] — order "
+                         "statistics over the full broadcast set instead "
+                         "of the linear mix; tolerance tier on the mesh "
+                         "(docs/architecture.md Robust aggregation)")
     ap.add_argument("--fast-allreduce", action="store_true",
                     help="opt-in psum fast path for dense mixes: ~C/D x less "
                          "data moved, fp32 reassociated — tolerance tier, "

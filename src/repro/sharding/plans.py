@@ -125,10 +125,12 @@ def scan_carry_plan(mesh: Mesh, n_clients: int,
     ``n_clients`` must divide evenly over the extent of ``client_axes`` —
     every shard carries the same static client block, which is what keeps
     the per-shard program identical (and the sharded scan bit-for-bit with
-    the single-device one — or, under ``RoundSpec.fast_allreduce``, within
-    the tolerance tier: the psum lowerings slice per-shard weight/column
-    blocks by the same linearized shard index this layout defines, so they
-    too require the uniform block size validated here)."""
+    the single-device one — or, under ``RoundSpec.fast_allreduce`` /
+    ``RoundSpec.robust_agg``, within the tolerance tier: the psum lowerings
+    slice per-shard weight/column blocks by the same linearized shard index
+    this layout defines, and the robust reducers slice their local rows
+    back out of the gathered order statistics by it, so both require the
+    uniform block size validated here)."""
     client_axes = tuple(client_axes)
     n_shards, sizes = _client_axis_extents(mesh, client_axes, "client axis")
     if n_clients % n_shards != 0:
@@ -198,6 +200,20 @@ def cohort_carry_plan(mesh: Mesh, n_enrolled: int, cohort_size: int,
     return CohortCarryPlan(n_enrolled=n_enrolled, cohort_size=cohort_size,
                            client_axes=client_axes, n_shards=n_shards,
                            axis_sizes=sizes)
+
+
+def gathered_mix_models_moved(n_clients: int, n_shards: int) -> int:
+    """Models RECEIVED per device per round by a gathered (all-gather +
+    replicated math + keep-local-rows) mix lowering — the communication
+    price of every robust reducer (``aggregation.mix_median`` et al.) and
+    of the bitwise linear gather paths: ``C - C/D`` remote client blocks.
+    The psum fast tier moves O(1) models instead, which is exactly the
+    volume robust order statistics cannot reclaim (they are not
+    psum-associative); ``benchmarks/bench_robust.py`` prices the gap."""
+    if n_shards < 1 or n_clients % n_shards:
+        raise ValueError(
+            f"n_clients={n_clients} must divide over n_shards={n_shards}")
+    return n_clients - n_clients // n_shards
 
 
 def data_axes(multi_pod: bool) -> Tuple[str, ...]:

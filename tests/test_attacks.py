@@ -1,0 +1,352 @@
+"""Byzantine attack stages (core/attacks.py + rounds.make_attack).
+
+Unit side: every shipped attack is a pure keyed transform on the gathered
+``[C, ...]`` broadcast tree — honest rows pass through BITWISE untouched,
+attacked rows follow the published formula (checked against independent
+numpy math), the one stochastic attack draws deterministically from its
+key, and ``n_attackers == 0`` degenerates to the exact identity.
+
+Engine side (the test-matrix centerpiece, with tests/test_robust_mix.py):
+under the linear mix every attack stays inside the bitwise contract — the
+compiled ``lax.scan`` driver, the per-round Python loop, and the
+mesh-lowered scan agree bit-for-bit on params, metric history, and ledger
+hash links. The attack key folds from ``k_dp`` with its own salt, so an
+inactive attack reproduces the attack-free baseline exactly.
+"""
+import itertools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks, rounds, topology
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+C = 8
+
+# The shipped attack zoo at representative strengths — the row axis of the
+# attack x aggregator grid (tests/test_robust_mix.py reuses it).
+ATTACKS = [
+    attacks.SignFlip(n_attackers=2, scale=2.0),
+    attacks.ScaledNoise(n_attackers=2, sigma2=0.5),
+    attacks.ALIE(n_attackers=2, z=1.2),
+    attacks.ModelReplacement(n_attackers=1),
+]
+
+
+def _ids(atk):
+    return type(atk).__name__
+
+
+def _full(key, c=C, p=33):
+    """A trained-like [C, ...] broadcast tree (two ranks, fp32)."""
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (c, 6, p), jnp.float32),
+            "b": jax.random.normal(k2, (c, p), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Attack transforms (unit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("atk", ATTACKS, ids=_ids)
+def test_honest_rows_bitwise_untouched(atk):
+    full = _full(jax.random.key(0))
+    out = atk.apply(full, jax.random.key(1), C)
+    m = atk.n_attackers
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a)[m:], np.asarray(b)[m:])
+        assert not np.array_equal(np.asarray(a)[:m], np.asarray(b)[:m])
+
+
+@pytest.mark.parametrize("cls", [attacks.SignFlip, attacks.ScaledNoise,
+                                 attacks.ALIE, attacks.ModelReplacement],
+                         ids=lambda c: c.__name__)
+def test_zero_attackers_is_identity(cls):
+    atk = cls(n_attackers=0)
+    assert not atk.active
+    full = _full(jax.random.key(2))
+    out = atk.apply(full, jax.random.key(3), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sign_flip_formula():
+    full = _full(jax.random.key(4))
+    out = attacks.SignFlip(n_attackers=3, scale=2.5).apply(
+        full, jax.random.key(0), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a)[:3],
+                                      -2.5 * np.asarray(b)[:3])
+
+
+def test_scaled_noise_keyed_and_calibrated():
+    full = {"w": jnp.zeros((4, 50_000), jnp.float32)}
+    atk = attacks.ScaledNoise(n_attackers=2, sigma2=0.25)
+    out = atk.apply(full, jax.random.key(5), 4)
+    again = atk.apply(full, jax.random.key(5), 4)
+    other = atk.apply(full, jax.random.key(6), 4)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(again["w"]))   # keyed: replays
+    assert not np.array_equal(np.asarray(out["w"][:2]),
+                              np.asarray(other["w"][:2]))   # fresh key draws
+    assert abs(np.asarray(out["w"][0]).var() - 0.25) < 0.02
+    np.testing.assert_array_equal(np.asarray(out["w"][2:]), 0)
+
+
+def test_alie_matches_honest_statistics():
+    full = _full(jax.random.key(7))
+    m, z = 3, 1.2
+    out = attacks.ALIE(n_attackers=m, z=z).apply(full, jax.random.key(0), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        honest = np.asarray(b)[m:]
+        want = honest.mean(axis=0) - z * honest.std(axis=0)
+        got = np.asarray(a)[:m]
+        for i in range(m):   # every attacker broadcasts the SAME point
+            np.testing.assert_allclose(got[i], want, rtol=2e-6, atol=1e-7)
+
+
+def test_alie_omniscient_of_honest_rows_only():
+    """The ALIE point is a function of the honest rows alone — garbling the
+    attacker rows before apply() changes nothing (the omniscient adversary
+    discards its own pre-attack models)."""
+    full = _full(jax.random.key(8))
+    atk = attacks.ALIE(n_attackers=2, z=1.5)
+    garbled = jax.tree.map(
+        lambda l: l.at[:2].set(jnp.float32(1e6)), full)
+    out = atk.apply(full, jax.random.key(0), C)
+    out_g = atk.apply(garbled, jax.random.key(0), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out_g)):
+        np.testing.assert_array_equal(np.asarray(a)[:2], np.asarray(b)[:2])
+
+
+def test_model_replacement_hijacks_the_mean():
+    """With boost = C (the default), one attacker's deviation boosting pulls
+    the linear mean (1-1/C) of the way onto the attacker's ORIGINAL model:
+    mean_after = mu + ((C-1)/C)(w_0 - mu) — the backdoor-insertion
+    scaling. Exact identity, plus the hijack direction (C-1x closer to the
+    attacker than the honest mean was)."""
+    full = _full(jax.random.key(9))
+    out = attacks.ModelReplacement(n_attackers=1).apply(
+        full, jax.random.key(0), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        w0 = np.asarray(b)[0]
+        mu = np.asarray(b).mean(axis=0)
+        hijacked_mean = np.asarray(a).mean(axis=0)
+        np.testing.assert_allclose(hijacked_mean,
+                                   mu + (C - 1) / C * (w0 - mu),
+                                   rtol=1e-4, atol=1e-5)
+        gap_before = np.linalg.norm(mu - w0)
+        gap_after = np.linalg.norm(hijacked_mean - w0)
+        assert gap_after < 1.5 * gap_before / C
+
+
+def test_model_replacement_explicit_boost_formula():
+    full = _full(jax.random.key(10))
+    out = attacks.ModelReplacement(n_attackers=2, boost=3.0).apply(
+        full, jax.random.key(0), C)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        mu = np.asarray(b).mean(axis=0)
+        want = mu + 3.0 * (np.asarray(b)[:2] - mu)
+        np.testing.assert_allclose(np.asarray(a)[:2], want,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_validate_rejects_degenerate_attacker_counts():
+    full = _full(jax.random.key(11))
+    with pytest.raises(ValueError):
+        attacks.SignFlip(n_attackers=C).apply(full, jax.random.key(0), C)
+    with pytest.raises(ValueError):
+        attacks.ALIE(n_attackers=-1).apply(full, jax.random.key(0), C)
+    # and at stage-build time, before any tracing
+    spec = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1,
+                            attack=attacks.SignFlip(n_attackers=4))
+    with pytest.raises(ValueError):
+        rounds.make_attack(spec)
+
+
+def test_from_name_round_trips_the_cli_grammar():
+    assert attacks.from_name("signflip:2", 3) == \
+        attacks.SignFlip(n_attackers=3, scale=2.0)
+    assert attacks.from_name("noise:0.5:2") == \
+        attacks.ScaledNoise(n_attackers=1, sigma2=0.5, scale=2.0)
+    assert attacks.from_name("alie:1.2", 2) == \
+        attacks.ALIE(n_attackers=2, z=1.2)
+    assert attacks.from_name("replace:8") == \
+        attacks.ModelReplacement(n_attackers=1, boost=8.0)
+    with pytest.raises(ValueError):
+        attacks.from_name("gradient_ascent")
+
+
+def test_attack_is_hashable_spec_payload():
+    """Attacks ride the hashable RoundSpec (compiled-runner cache key)."""
+    a = attacks.ALIE(n_attackers=2, z=1.5)
+    assert hash(a) == hash(attacks.ALIE(n_attackers=2, z=1.5))
+    s1 = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, attack=a)
+    s2 = rounds.RoundSpec(n_clients=4, tau=1, eta=0.1, attack=a)
+    assert s1 == s2 and hash(s1) == hash(s2)
+
+
+# ---------------------------------------------------------------------------
+# The attack stage inside the round
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(atk, k_rounds=3, seed=31, **spec_kw):
+    key = jax.random.key(seed)
+    src = FLDataSource(key, C, samples_per_client=32, seed=seed)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=C, tau=2, eta=0.1, n_lazy=1,
+                            sigma2=0.05, mine_attempts=64, difficulty_bits=2,
+                            topology=topology.Ring(neighbors=2),
+                            attack=atk, **spec_kw)
+    run_key = jax.random.fold_in(key, 2)
+    loop = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.round_batch, run_key, k_rounds)
+    scan = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, src.static_batch(), run_key, k_rounds)
+    return loop, scan
+
+
+@pytest.mark.parametrize("atk", ATTACKS, ids=_ids)
+def test_scan_matches_loop_under_every_attack(atk):
+    """Linear mix + attack stays in the bitwise tier: scan and loop agree
+    exactly on params, history, and ledger hash links (the attack composes
+    with the lazy + DP stages already in the spec)."""
+    (st_py, hist_py, led_py), (st_sc, hist_sc, led_sc) = _run_pair(atk)
+    for a, b in zip(jax.tree.leaves(st_py.params),
+                    jax.tree.leaves(st_sc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist_py == hist_sc
+    assert led_sc.validate_chain()
+    assert [b.header_hash for b in led_py.blocks] == \
+        [b.header_hash for b in led_sc.blocks]
+
+
+def test_inactive_attack_is_the_exact_baseline():
+    """attack=None and a zero-attacker attack produce bit-identical runs —
+    the attack key folds from k_dp with its own salt, so merely *enabling*
+    the stage never perturbs the lazy/DP/topology streams."""
+    (_, hist_none, led_none), _ = _run_pair(None)
+    (_, hist_zero, led_zero), _ = _run_pair(
+        attacks.SignFlip(n_attackers=0))
+    assert hist_none == hist_zero
+    assert [b.header_hash for b in led_none.blocks] == \
+        [b.header_hash for b in led_zero.blocks]
+
+
+def test_attack_stream_is_deterministic_and_keyed():
+    """Same run key replays the stochastic attack bitwise; a different run
+    key draws different noise (the history forks)."""
+    (_, h1, l1), _ = _run_pair(attacks.ScaledNoise(n_attackers=2), seed=41)
+    (_, h2, l2), _ = _run_pair(attacks.ScaledNoise(n_attackers=2), seed=41)
+    (_, h3, _), _ = _run_pair(attacks.ScaledNoise(n_attackers=2), seed=42)
+    assert h1 == h2
+    assert [b.header_hash for b in l1.blocks] == \
+        [b.header_hash for b in l2.blocks]
+    assert h1 != h3
+
+
+def test_attack_actually_moves_the_aggregate():
+    """Sanity that the stage is live: a strong sign-flip visibly degrades
+    the linear-mean aggregate vs the attack-free run."""
+    (st_clean, hist_clean, _), _ = _run_pair(None, k_rounds=4)
+    (st_atk, hist_atk, _), _ = _run_pair(
+        attacks.SignFlip(n_attackers=3, scale=4.0), k_rounds=4)
+    assert hist_atk != hist_clean
+    assert hist_atk[-1]["global_loss"] > hist_clean[-1]["global_loss"]
+
+
+def test_sharded_scan_bitwise_under_attack_single_device():
+    """The mesh code path (shard_map gather + local-rows slice) on however
+    many devices this host has — bitwise with the unsharded scan."""
+    from jax.sharding import Mesh
+    atk = attacks.ALIE(n_attackers=2, z=1.2)
+    key = jax.random.key(17)
+    src = FLDataSource(key, C, samples_per_client=16, seed=17)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = rounds.RoundSpec(n_clients=C, tau=1, eta=0.1, mine_attempts=16,
+                            difficulty_bits=1,
+                            topology=topology.Ring(neighbors=1), attack=atk)
+    run_key = jax.random.fold_in(key, 2)
+    batch = src.static_batch()
+    st, hist, led = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, batch, run_key, 3)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    st_m, hist_m, led_m = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, batch, run_key, 3, mesh=mesh)
+    for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(st_m.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist == hist_m
+    assert [b.header_hash for b in led.blocks] == \
+        [b.header_hash for b in led_m.blocks]
+
+
+@pytest.mark.slow
+def test_sharded_attack_grid_bitwise_subprocess():
+    """4 fake host devices, every attack under the linear ring mix: the
+    mesh-lowered scan (all-gather + identical full-[C,...] transform +
+    local-rows slice) equals the single-device scan bit-for-bit, histories
+    and ledger hashes included."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import attacks, rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+
+        C = 8
+        ATTACKS = [
+            attacks.SignFlip(n_attackers=2, scale=2.0),
+            attacks.ScaledNoise(n_attackers=2, sigma2=0.5),
+            attacks.ALIE(n_attackers=2, z=1.2),
+            attacks.ModelReplacement(n_attackers=1),
+        ]
+        key = jax.random.key(29)
+        src = FLDataSource(key, C, samples_per_client=16, seed=29)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        batch = src.static_batch()
+        run_key = jax.random.fold_in(key, 2)
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+
+        out = {}
+        for atk in ATTACKS:
+            spec = rounds.RoundSpec(
+                n_clients=C, tau=1, eta=0.1, n_lazy=1, sigma2=0.05,
+                mine_attempts=16, difficulty_bits=1,
+                topology=topology.Ring(neighbors=1), attack=atk)
+            st, hist, led = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, run_key, 3)
+            st_m, hist_m, led_m = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, run_key, 3, mesh=mesh)
+            bitwise = all(
+                bool((np.asarray(a) == np.asarray(b)).all())
+                for a, b in zip(jax.tree.leaves(st.params),
+                                jax.tree.leaves(st_m.params)))
+            out[type(atk).__name__] = (
+                bitwise and hist == hist_m and led_m.validate_chain()
+                and [b.header_hash for b in led.blocks]
+                == [b.header_hash for b in led_m.blocks])
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(res) == 4 and all(res.values()), res

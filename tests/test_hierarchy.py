@@ -49,14 +49,15 @@ FLAG_GRID = list(itertools.product(
     (False, True),                                   # fused_mix
     (None, True),                                    # sparse_mix
     (None, tuple(float(i + 1) for i in range(C))),   # data_weights
+    (None, "median", "trimmed:2", "geomed:4"),       # robust_agg
 ))
 
 
-def _spec(topo, fast, fused, sparse, weights):
+def _spec(topo, fast, fused, sparse, weights, robust=None):
     return rounds.RoundSpec(
         n_clients=C, tau=1, eta=0.1, mine_attempts=8, difficulty_bits=1,
         topology=topo, fast_allreduce=fast, fused_mix=fused,
-        sparse_mix=sparse, data_weights=weights)
+        sparse_mix=sparse, data_weights=weights, robust_agg=robust)
 
 
 @pytest.mark.parametrize("topo", TOPOLOGIES,
@@ -66,20 +67,21 @@ def test_dispatch_report_matches_executed_mode(topo):
     for every flag combination — one resolver, zero drift."""
     import jax.numpy as jnp
     batch = {"x": jnp.zeros((C, 4, 3)), "y": jnp.zeros((C, 4), jnp.int32)}
-    for fast, fused, sparse, weights in FLAG_GRID:
-        spec = _spec(topo, fast, fused, sparse, weights)
+    for fast, fused, sparse, weights, robust in FLAG_GRID:
+        spec = _spec(topo, fast, fused, sparse, weights, robust)
         try:
             reported = rounds.dispatch_plan(spec, batch, 3)["mix_mode"]
         except ValueError:
             # resolver rejected the combo (e.g. sparse_mix=True on a
-            # stochastic graph) — the executor must reject it identically
+            # stochastic graph, or a robust override crossed with a
+            # linear fast path) — the executor must reject it identically
             with pytest.raises(ValueError):
                 rounds.make_communicate(spec)
             continue
         executed = rounds.make_communicate(spec).plan.mode
         assert reported == executed, (
             type(topo).__name__, fast, fused, sparse,
-            weights is not None, reported, executed)
+            weights is not None, robust, reported, executed)
 
 
 def test_dispatch_grid_covers_every_executor_mode():
@@ -88,8 +90,8 @@ def test_dispatch_grid_covers_every_executor_mode():
     it, this fails and the grid must grow."""
     seen = set()
     for topo in TOPOLOGIES:
-        for fast, fused, sparse, weights in FLAG_GRID:
-            spec = _spec(topo, fast, fused, sparse, weights)
+        for fast, fused, sparse, weights, robust in FLAG_GRID:
+            spec = _spec(topo, fast, fused, sparse, weights, robust)
             try:
                 seen.add(rounds.make_communicate(spec).plan.mode)
                 # sharded resolve: EXEC_HALO degrades to EXEC_SHIFT_HALO

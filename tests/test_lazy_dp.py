@@ -114,3 +114,75 @@ def test_detection_threshold_tradeoff_at_large_noise():
     # and the wide threshold must not flag a clean cohort
     clean_mask, _ = detection.detect_lazy(params, threshold_frac=0.5)
     assert int(np.sum(np.asarray(clean_mask))) == 0
+
+
+def test_detection_metrics_vacuous_edges():
+    """Regression (the n_lazy == 0 edge): a detector that stays quiet on an
+    attack-free cohort used to score precision = recall = 0.0 from the
+    guarded denominators — reading as total failure on a perfectly handled
+    round. Both empty edges now follow the vacuous-truth convention."""
+    from repro.core import detection
+    quiet = jnp.zeros(8, bool)
+    met = detection.detection_metrics(quiet, 0)
+    assert met == {"precision": 1.0, "recall": 1.0, "flagged": 0}
+    # nothing flagged but attackers present: precision vacuous, recall 0
+    met = detection.detection_metrics(quiet, 3)
+    assert met["precision"] == 1.0 and met["recall"] == 0.0
+    # flags on a clean cohort: all false positives, recall vacuous
+    noisy = jnp.arange(8) < 2
+    met = detection.detection_metrics(noisy, 0)
+    assert met["precision"] == 0.0 and met["recall"] == 1.0
+    assert met["flagged"] == 2
+
+
+def _attacked_broadcast(atk, key, n=10, m=2):
+    """Honest rows = shared base + small trained deltas; first-m rows
+    replaced by the attack — the round-level view detect_lazy_round sees
+    (params_ref = the shared base every client started from)."""
+    from repro.core import attacks
+    base = jax.random.normal(key, (2000,))
+    deltas = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (n, 2000))
+    params = {"w": base[None] + deltas}
+    full = atk.apply(params, jax.random.fold_in(key, 2), n)
+    return full, {"w": base}
+
+
+def test_detection_roc_signflip_vs_alie():
+    """Attack-stage ROC, the detectability ordering the attack zoo is built
+    around: a single sign-flip broadcast sits ~2||base|| from the reference
+    (a huge norm outlier -> recall 1.0), while a single ALIE broadcast
+    hides inside the honest variance envelope and fully evades both the
+    norm and nearest-neighbour tests (recall 0.0, zero flags). Robust
+    aggregation (tests/test_robust_mix.py) is the answer to the second
+    kind, detection alone is not."""
+    from repro.core import attacks, detection
+    n = 10
+    key = jax.random.key(7)
+
+    flipped, ref = _attacked_broadcast(
+        attacks.SignFlip(n_attackers=1), key, n, 1)
+    mask, _ = detection.detect_lazy_round(flipped, ref)
+    met_flip = detection.detection_metrics(mask, 1)
+    assert met_flip == {"precision": 1.0, "recall": 1.0, "flagged": 1}
+
+    sneaky, ref = _attacked_broadcast(
+        attacks.ALIE(n_attackers=1, z=1.0), key, n, 1)
+    mask, _ = detection.detect_lazy_round(sneaky, ref)
+    met_alie = detection.detection_metrics(mask, 1)
+    assert met_alie["recall"] < met_flip["recall"]
+    assert met_alie["flagged"] == 0, np.asarray(mask)
+
+
+def test_detection_catches_colluding_alie_pair_as_plagiarism():
+    """TWO ALIE attackers broadcast the IDENTICAL point, so the plagiarism
+    nearest-neighbour test catches the collusion even though each broadcast
+    individually sits inside the honest envelope — the lazy-client detector
+    doubles as a collusion detector for free."""
+    from repro.core import attacks, detection
+    n, m = 10, 2
+    full, ref = _attacked_broadcast(
+        attacks.ALIE(n_attackers=m, z=1.0), jax.random.key(7), n, m)
+    mask, _ = detection.detect_lazy_round(full, ref)
+    met = detection.detection_metrics(mask, m)
+    assert met == {"precision": 1.0, "recall": 1.0, "flagged": 2}
+    assert int(np.sum(np.asarray(mask)[m:])) == 0

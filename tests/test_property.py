@@ -213,3 +213,87 @@ def test_shipped_topologies_row_stochastic(c, seed, ring_k, p_link):
                                 round_idx=jnp.int32(seed % 7)))
         assert (w >= 0).all()
         np.testing.assert_allclose(w.sum(axis=1), np.ones(c), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Robust consensus reducers (aggregation.robust_*)
+# ---------------------------------------------------------------------------
+
+
+def _client_stack(c, p, seed, spread):
+    x = jax.random.normal(jax.random.key(seed), (c, p)) * spread
+    return {"w": x, "b": jax.random.normal(jax.random.key(seed + 1), (c, 3))}
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(3, 10), p=st.integers(1, 17), seed=st.integers(0, 500),
+       spread=st.floats(0.1, 100.0), perm_seed=st.integers(0, 500))
+def test_robust_reducers_permutation_invariant(c, p, seed, spread, perm_seed):
+    """Order statistics cannot depend on WHO holds each model: permuting
+    the client axis leaves the sorting reducers' aggregate BITWISE
+    unchanged (sort canonicalizes the order before any arithmetic), and
+    the Weiszfeld geometric median unchanged to float tolerance (its
+    weighted sums run in client order, so a permutation reassociates
+    fp32 — value-invariant, not bit-invariant)."""
+    full = _client_stack(c, p, seed, spread)
+    perm = np.asarray(jax.random.permutation(
+        jax.random.key(perm_seed), c))
+    shuffled = jax.tree.map(lambda l: l[perm], full)
+    for reduce_full in (aggregation.robust_median,
+                        lambda t: aggregation.robust_trimmed(t, (c - 1) // 2)):
+        a = reduce_full(full)
+        b = reduce_full(shuffled)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la)[0],
+                                          np.asarray(lb)[0])
+    a = aggregation.robust_geomedian(full, 8)
+    b = aggregation.robust_geomedian(shuffled, 8)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la)[0], np.asarray(lb)[0],
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 10), p=st.integers(1, 17), seed=st.integers(0, 500))
+def test_robust_reducers_agree_with_mean_on_identical_rows(c, p, seed):
+    """Full consensus input (every client broadcasts the same model) is a
+    fixed point of every aggregator — robust or linear."""
+    row = {"w": jax.random.normal(jax.random.key(seed), (p,)),
+           "b": jax.random.normal(jax.random.key(seed + 1), (3,))}
+    full = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (c,) + l.shape), row)
+    for reduce_full in (aggregation.robust_median,
+                        lambda t: aggregation.robust_trimmed(t, (c - 1) // 2),
+                        lambda t: aggregation.robust_geomedian(t, 8)):
+        out = reduce_full(full)
+        for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(2, 12), p=st.integers(1, 33), seed=st.integers(0, 500),
+       spread=st.floats(0.1, 1000.0))
+def test_trimmed_zero_is_the_mean_to_ulp(c, p, seed, spread):
+    """trimmed(0) IS the arithmetic mean up to fp32 reassociation of the
+    sorted sum. Two-tier claim, pinned so neither bound silently grows:
+    on same-sign data (condition number ~1) the two agree to <= 16 ULP;
+    on centered data cancellation makes a relative bound meaningless, and
+    the error obeys the classic backward bound
+    ``(c-1) * eps * sum_i |x_i| / c`` per coordinate (x2 margin)."""
+    from equivalence import tree_max_ulp
+
+    x = jax.random.normal(jax.random.key(seed), (c, p)) * spread
+
+    pos = {"w": x + 4.0 * spread}      # same sign: well-conditioned sum
+    trimmed = aggregation.robust_trimmed(pos, 0)
+    mean = jax.tree.map(
+        lambda l: jnp.broadcast_to(jnp.mean(l.astype(jnp.float32), axis=0),
+                                   l.shape), pos)
+    assert tree_max_ulp(trimmed, mean) <= 16
+
+    t0 = np.asarray(aggregation.robust_trimmed({"w": x}, 0)["w"][0])
+    m0 = np.asarray(jnp.mean(x.astype(jnp.float32), axis=0))
+    bound = (c - 1) * np.finfo(np.float32).eps \
+        * np.abs(np.asarray(x)).sum(axis=0) / c
+    assert (np.abs(t0 - m0) <= 2.0 * bound + 1e-30).all()

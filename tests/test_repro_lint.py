@@ -232,3 +232,33 @@ def test_ruff_clean():
                           "benchmarks", "examples"],
                          capture_output=True, text=True, cwd=REPO_ROOT)
     assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_rl205_fires_on_robust_kind_dispatch():
+    """The ROBUST MixLowering kind joined the RL205 frozensets with the
+    robust-aggregation family — re-deriving 'is this spec robust?' from the
+    kind outside core/topology.py is the same dispatch drift for the new
+    tier (standalone case: the 1:1 FIXTURES<->RULES map keeps one canonical
+    fixture per rule, this pins the new kind specifically)."""
+    const = """
+        from repro.core import topology
+
+        def make_communicate(spec, plan):
+            if plan.kind == topology.ROBUST:  # <-- flagged
+                return "median"
+            return "linear"
+        """
+    findings = _lint(const)
+    assert "RL205" in {f.code for f in findings}, findings
+
+    literal = """
+        def pick_mix(plan):
+            if plan.kind == "robust":  # <-- flagged
+                return "median"
+            return "linear"
+        """
+    findings = _lint(literal)
+    assert "RL205" in {f.code for f in findings}, findings
+
+    # ...and the one legal home stays legal
+    assert _lint(const, path="src/repro/core/topology.py") == []

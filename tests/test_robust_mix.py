@@ -1,0 +1,421 @@
+"""Byzantine-robust aggregation (aggregation.robust_* + RoundSpec.robust_agg).
+
+Reducer side: coordinate-wise median / trimmed mean and the Weiszfeld
+geometric median against independent numpy references, rank-1 broadcast
+shape, and outlier immunity.
+
+Resolver side: ``robust_agg`` routes through ``topology.resolve_mix_plan``
+as first-class EXEC modes (RL205 discipline — the executor switches only on
+``plan.mode``), conflicts with the linear fast paths are rejected once and
+identically by report and trace, and ``dispatch_plan`` reports the robust
+tier.
+
+Engine side (the test-matrix centerpiece, with tests/test_attacks.py): the
+full attack x aggregator grid — every shipped attack under every robust mix
+— agrees scan-vs-loop bitwise on this host; the mesh-lowered runs live in
+the TOLERANCE tier (all-gather + replicated order statistics, rtol=1e-5 on
+4 fake devices). The breakdown-point test pins the theory the family
+exists for: f = ⌊(C-1)/2⌋ colluding sign-flippers at 1e6 scale leave every
+robust aggregate inside the honest envelope while the linear mean is
+dragged 5 orders of magnitude away.
+"""
+import itertools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from equivalence import assert_trees_close
+from repro.core import aggregation, attacks, rounds, topology
+from repro.data.pipeline import FLDataSource
+from repro.models.mlp import init_mlp, mlp_loss
+from test_attacks import ATTACKS
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+C = 8
+
+# The defense axis of the grid (None = the linear-mean baseline).
+ROBUST = [None, "median", "trimmed:2", "geomed:4"]
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs 4 devices (CI multidevice lane: "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _full(key, c=C, p=19):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (c, 3, p), jnp.float32),
+            "b": jax.random.normal(k2, (c, p), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Reducers vs numpy references
+# ---------------------------------------------------------------------------
+
+
+def test_median_matches_numpy():
+    full = _full(jax.random.key(0))
+    out = aggregation.robust_median(full)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        want = np.median(np.asarray(b), axis=0)
+        for row in np.asarray(a):                  # rank-1: every row = agg
+            np.testing.assert_allclose(row, want, rtol=1e-6)
+
+
+def test_trimmed_matches_numpy():
+    full = _full(jax.random.key(1))
+    for t in (0, 1, 2, 3):
+        out = aggregation.robust_trimmed(full, t)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+            kept = np.sort(np.asarray(b), axis=0)[t:C - t]
+            want = kept.sum(axis=0) / (C - 2 * t)
+            # numpy's pairwise fp32 sum associates differently than XLA's
+            np.testing.assert_allclose(np.asarray(a)[0], want,
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_rejects_degenerate_trim():
+    full = _full(jax.random.key(2))
+    for t in (-1, C // 2, C):
+        with pytest.raises(ValueError):
+            aggregation.robust_trimmed(full, t)
+
+
+def test_geomedian_matches_numpy_weiszfeld():
+    """Same fixed-iteration Weiszfeld recurrence in numpy, same eps floor —
+    the fori_loop lowering reproduces it to float tolerance."""
+    full = _full(jax.random.key(3))
+    iters, eps = 6, 1e-6
+    out = aggregation.robust_geomedian(full, iters, eps=eps)
+
+    flat = np.concatenate([np.asarray(l).reshape(C, -1)
+                           for l in jax.tree.leaves(full)], axis=1)
+    y = flat.mean(axis=0)
+    for _ in range(iters):
+        d = np.sqrt(((flat - y[None]) ** 2).sum(axis=1))
+        w = 1.0 / np.maximum(d, eps)
+        w = w / w.sum()
+        y = w @ flat
+    got = np.concatenate([np.asarray(l)[0].ravel()
+                          for l in jax.tree.leaves(out)])
+    np.testing.assert_allclose(got, y, rtol=1e-5, atol=1e-6)
+
+
+def test_geomedian_finds_the_center_of_symmetric_points():
+    """Four models at the corners of a square -> geometric median at the
+    center (the analytic optimum, not just the Weiszfeld fixed point)."""
+    pts = jnp.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
+    out = aggregation.robust_geomedian({"w": pts}, n_iters=32)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("reduce_full", [
+    aggregation.robust_median,
+    lambda t: aggregation.robust_trimmed(t, 1),
+], ids=["median", "trimmed1"])
+def test_coordinatewise_reducers_ignore_one_outlier(reduce_full):
+    """One arbitrarily corrupted row cannot move a per-coordinate order
+    statistic outside the honest per-coordinate range."""
+    full = _full(jax.random.key(4))
+    spiked = jax.tree.map(lambda l: l.at[0].set(jnp.float32(1e8)), full)
+    out = reduce_full(spiked)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(full)):
+        honest = np.asarray(b)[1:]
+        agg = np.asarray(a)[0]
+        assert (agg >= honest.min(axis=0) - 1e-6).all()
+        assert (agg <= honest.max(axis=0) + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Resolver routing (single decision surface)
+# ---------------------------------------------------------------------------
+
+
+def _spec(robust=None, topo=None, **kw):
+    kw.setdefault("mine_attempts", 8)
+    return rounds.RoundSpec(n_clients=C, tau=1, eta=0.1, difficulty_bits=1,
+                            topology=topo or topology.Ring(neighbors=1),
+                            robust_agg=robust, **kw)
+
+
+def test_parse_robust_grammar():
+    assert topology.parse_robust("median", C) == (topology.EXEC_MEDIAN, 0, 0)
+    assert topology.parse_robust("trimmed", C) == \
+        (topology.EXEC_TRIMMED, 1, 0)
+    assert topology.parse_robust("trimmed:3", C) == \
+        (topology.EXEC_TRIMMED, 3, 0)
+    assert topology.parse_robust("geomed", C) == \
+        (topology.EXEC_GEOMED, 0, topology.GEOMED_DEFAULT_ITERS)
+    assert topology.parse_robust("geomed:4", C) == (topology.EXEC_GEOMED, 0, 4)
+    with pytest.raises(ValueError):
+        topology.parse_robust("trimmed:4", C)      # 2t = C
+    with pytest.raises(ValueError):
+        topology.parse_robust("geomed:0", C)
+    with pytest.raises(ValueError):
+        topology.parse_robust("krum", C)
+
+
+@pytest.mark.parametrize("robust, mode", [
+    ("median", topology.EXEC_MEDIAN),
+    ("trimmed:2", topology.EXEC_TRIMMED),
+    ("geomed:4", topology.EXEC_GEOMED),
+], ids=["median", "trimmed", "geomed"])
+def test_resolver_routes_robust_over_any_topology(robust, mode):
+    """robust_agg preempts the linear ladder for every topology shape —
+    the MixPlan is the rank-1 robust override, kind ROBUST, mix tier
+    'robust'."""
+    for topo in (topology.FullMesh(), topology.Ring(neighbors=1),
+                 topology.ClusterTopology(n_clusters=2)):
+        plan = topology.resolve_mix_plan(_spec(robust, topo))
+        assert plan.mode == mode
+        assert plan.kind == topology.ROBUST
+        assert plan.mix == "robust"
+    plan = topology.resolve_mix_plan(_spec(robust))
+    assert (plan.trim, plan.robust_iters) == \
+        {"median": (0, 0), "trimmed:2": (2, 0), "geomed:4": (0, 4)}[robust]
+
+
+def test_robust_agg_mean_falls_through_to_linear():
+    """'mean' is the explicit linear baseline: identical routing decision
+    to robust_agg=None (the plan holds array payloads, so compare the
+    decision fields, not the dataclass)."""
+    base = topology.resolve_mix_plan(_spec(None))
+    mean = topology.resolve_mix_plan(_spec("mean"))
+    assert (mean.mode, mean.kind, mean.mix) == \
+        (base.mode, base.kind, base.mix)
+    assert base.kind != topology.ROBUST
+
+
+def test_resolver_rejects_linear_fast_path_conflicts():
+    """The psum/fused/sparse/data-weight fast tiers are linear-mix
+    machinery; combining them with a robust override fails ONCE in the
+    resolver — and make_communicate fails identically (report == trace
+    even for the error path)."""
+    conflicts = [dict(fast_allreduce=True), dict(fused_mix=True),
+                 dict(sparse_mix=True),
+                 dict(data_weights=tuple(float(i + 1) for i in range(C)))]
+    for kw in conflicts:
+        bad = _spec("median", **kw)
+        with pytest.raises(ValueError):
+            topology.resolve_mix_plan(bad)
+        with pytest.raises(ValueError):
+            rounds.make_communicate(bad)
+
+
+def test_dispatch_reports_robust_tier():
+    batch = {"x": jnp.zeros((C, 4, 3)), "y": jnp.zeros((C, 4), jnp.int32)}
+    plan = rounds.dispatch_plan(_spec("geomed"), batch, 3)
+    assert plan["mix"] == "robust"
+    assert plan["mix_mode"] == topology.EXEC_GEOMED
+    assert plan["mix_mode"] == rounds.make_communicate(_spec("geomed")).plan.mode
+
+
+# ---------------------------------------------------------------------------
+# Attack x aggregator grid (scan vs loop, bitwise on one host)
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(robust, atk, k_rounds=2, seed=53):
+    key = jax.random.key(seed)
+    src = FLDataSource(key, C, samples_per_client=16, seed=seed)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    spec = _spec(robust, attack=atk, mine_attempts=16)
+    run_key = jax.random.fold_in(key, 2)
+    loop = rounds.run_blade_fl(
+        mlp_loss, spec, params, src.round_batch, run_key, k_rounds)
+    scan = rounds.run_blade_fl_scan(
+        mlp_loss, spec, params, src.static_batch(), run_key, k_rounds)
+    return loop, scan
+
+
+@pytest.mark.parametrize("atk", ATTACKS,
+                         ids=lambda a: type(a).__name__)
+@pytest.mark.parametrize("robust", ROBUST,
+                         ids=["mean", "median", "trimmed", "geomed"])
+def test_grid_scan_matches_loop(robust, atk):
+    """Every cell of the attack x aggregator matrix: compiled scan ==
+    Python loop bitwise (params, history, hash links) — the robust
+    executors and the attack stage both compile into the scan."""
+    (st_py, hist_py, led_py), (st_sc, hist_sc, led_sc) = \
+        _run_pair(robust, atk)
+    for a, b in zip(jax.tree.leaves(st_py.params),
+                    jax.tree.leaves(st_sc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist_py == hist_sc
+    assert led_sc.validate_chain()
+    assert [b.header_hash for b in led_py.blocks] == \
+        [b.header_hash for b in led_sc.blocks]
+
+
+def test_robust_consensus_is_rank1():
+    """Under a robust override every client adopts the same aggregate
+    (rank-1, like FullMesh) regardless of the configured ring."""
+    (st, _, _), _ = _run_pair("median", None)
+    for leaf in jax.tree.leaves(st.params):
+        rows = np.asarray(leaf)
+        for i in range(1, rows.shape[0]):
+            np.testing.assert_array_equal(rows[i], rows[0])
+
+
+# ---------------------------------------------------------------------------
+# Breakdown points
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_point_reducer_level():
+    """f = ⌊(C-1)/2⌋ = 3 colluding sign-flippers at 1e6 scale: median,
+    trimmed(3) and the geometric median stay inside the honest envelope;
+    the linear mean is dragged ~5 orders of magnitude out. Exactly the
+    breakdown-point table in docs/architecture.md."""
+    f = (C - 1) // 2
+    full = _full(jax.random.key(5))
+    attacked = attacks.SignFlip(n_attackers=f, scale=1e6).apply(
+        full, jax.random.key(0), C)
+
+    honest_scale = max(float(jnp.max(jnp.abs(l[f:])))
+                       for l in jax.tree.leaves(full))
+    for reduce_full in (aggregation.robust_median,
+                        lambda t: aggregation.robust_trimmed(t, f),
+                        lambda t: aggregation.robust_geomedian(t, 16)):
+        out = reduce_full(attacked)
+        worst = max(float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(out))
+        assert worst <= 2.0 * honest_scale, worst
+
+    mean = jax.tree.map(lambda l: jnp.mean(l, axis=0), attacked)
+    mean_scale = max(float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(mean))
+    assert mean_scale > 1e4 * honest_scale
+
+
+def test_breakdown_point_engine_level():
+    """Same story end-to-end: 3/8 sign-flipping clients at 1e4 scale. The
+    median-aggregated run keeps finite, honest-sized params; the linear
+    ring is blown up by the attack within two rounds."""
+    atk = attacks.SignFlip(n_attackers=3, scale=1e4)
+    (st_rob, hist_rob, _), _ = _run_pair("median", atk, seed=61)
+    (st_lin, _, _), _ = _run_pair(None, atk, seed=61)
+    rob_norm = max(float(jnp.max(jnp.abs(l)))
+                   for l in jax.tree.leaves(st_rob.params))
+    lin_norm = max(float(jnp.max(jnp.abs(l)))
+                   for l in jax.tree.leaves(st_lin.params))
+    assert rob_norm < 1e2, rob_norm
+    assert lin_norm > 1e3 * rob_norm, (lin_norm, rob_norm)
+    assert np.isfinite(hist_rob[-1]["global_loss"])
+
+
+# ---------------------------------------------------------------------------
+# Mesh lowering (tolerance tier)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_robust_single_device_mesh():
+    """The shard_map lowering (gather + replicated reducer + local rows) on
+    a 1-device mesh — cheap coverage of the mesh code path everywhere."""
+    from jax.sharding import Mesh
+    key = jax.random.key(67)
+    src = FLDataSource(key, C, samples_per_client=16, seed=67)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    batch = src.static_batch()
+    run_key = jax.random.fold_in(key, 2)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    for robust in ("median", "trimmed:2", "geomed:4"):
+        spec = _spec(robust, attack=attacks.ALIE(n_attackers=2, z=1.2),
+                     mine_attempts=16)
+        st, hist, _ = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, batch, run_key, 2)
+        st_m, hist_m, _ = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, batch, run_key, 2, mesh=mesh)
+        assert_trees_close(st_m.params, st.params, rtol=1e-5)
+        assert hist == hist_m
+
+
+@needs4
+@pytest.mark.tolerance
+def test_sharded_robust_four_devices_tolerance():
+    """The acceptance bar: every robust mix under attack on a real 4-way
+    client-sharded mesh agrees with the single-device scan to rtol=1e-5
+    (tolerance tier — robust reductions are not psum-associative, so no
+    bitwise claim; hash forks are allowed and not asserted)."""
+    from jax.sharding import Mesh
+    key = jax.random.key(71)
+    src = FLDataSource(key, C, samples_per_client=16, seed=71)
+    params = init_mlp(jax.random.fold_in(key, 1))
+    batch = src.static_batch()
+    run_key = jax.random.fold_in(key, 2)
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    for robust, atk in itertools.product(
+            ("median", "trimmed:2", "geomed:4"),
+            (None, attacks.ALIE(n_attackers=2, z=1.2),
+             attacks.SignFlip(n_attackers=2, scale=2.0))):
+        spec = _spec(robust, attack=atk, mine_attempts=16)
+        st, _, _ = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, batch, run_key, 2)
+        st_m, _, led_m = rounds.run_blade_fl_scan(
+            mlp_loss, spec, params, batch, run_key, 2, mesh=mesh)
+        assert_trees_close(st_m.params, st.params, rtol=1e-5)
+        assert led_m.validate_chain()
+
+
+@pytest.mark.slow
+def test_sharded_robust_grid_subprocess():
+    """4 fake host devices via subprocess: the full robust x attack grid,
+    mesh-lowered vs single-device, within the tolerance tier's rtol=1e-5
+    on every param leaf."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import itertools, json
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import attacks, rounds, topology
+        from repro.data.pipeline import FLDataSource
+        from repro.models.mlp import init_mlp, mlp_loss
+
+        C = 8
+        key = jax.random.key(73)
+        src = FLDataSource(key, C, samples_per_client=16, seed=73)
+        params = init_mlp(jax.random.fold_in(key, 1))
+        batch = src.static_batch()
+        run_key = jax.random.fold_in(key, 2)
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+
+        ATTACKS = [None,
+                   attacks.SignFlip(n_attackers=2, scale=2.0),
+                   attacks.ScaledNoise(n_attackers=2, sigma2=0.5),
+                   attacks.ALIE(n_attackers=2, z=1.2),
+                   attacks.ModelReplacement(n_attackers=1)]
+        out = {}
+        for robust, atk in itertools.product(
+                ("median", "trimmed:2", "geomed:4"), ATTACKS):
+            spec = rounds.RoundSpec(
+                n_clients=C, tau=1, eta=0.1, mine_attempts=16,
+                difficulty_bits=1, topology=topology.Ring(neighbors=1),
+                robust_agg=robust, attack=atk)
+            st, _, _ = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, run_key, 2)
+            st_m, _, led_m = rounds.run_blade_fl_scan(
+                mlp_loss, spec, params, batch, run_key, 2, mesh=mesh)
+            ok = led_m.validate_chain()
+            for a, b in zip(jax.tree.leaves(st_m.params),
+                            jax.tree.leaves(st.params)):
+                a, b = np.asarray(a), np.asarray(b)
+                ok &= bool(np.allclose(a, b, rtol=1e-5, atol=1e-7))
+            name = type(atk).__name__ if atk else "none"
+            out[robust + "|" + name] = bool(ok)
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(res) == 15 and all(res.values()), res

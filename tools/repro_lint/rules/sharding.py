@@ -124,9 +124,9 @@ def check_donated_carry_read(ctx):
 # RL205
 
 _MIX_KIND_CONSTS = frozenset({"ALL_REDUCE", "NEIGHBOR_PERMUTE", "GATHER",
-                              "PSUM", "SEGMENT", "CLUSTER"})
+                              "PSUM", "SEGMENT", "CLUSTER", "ROBUST"})
 _MIX_KIND_STRINGS = frozenset({"all_reduce", "neighbor_permute", "gather",
-                               "psum", "segment", "cluster"})
+                               "psum", "segment", "cluster", "robust"})
 
 
 def _side_names(node):
